@@ -1,0 +1,37 @@
+"""Shared benchmark utilities: timing + the CSV row protocol.
+
+Every benchmark prints rows:  name,us_per_call,derived
+where `derived` is the benchmark's headline quantity (PCC, hypervolume
+ratio, roofline fraction, ...).
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+from typing import Callable, Optional
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived) -> None:
+    row = f"{name},{us_per_call:.3f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def time_fn(fn: Callable, *args, repeat: int = 3, warmup: int = 1, **kw) -> float:
+    """Median wall time per call in microseconds."""
+    for _ in range(warmup):
+        fn(*args, **kw)
+    times = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn(*args, **kw)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def section(title: str) -> None:
+    print(f"# --- {title} ---", file=sys.stderr, flush=True)

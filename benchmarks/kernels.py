@@ -1,0 +1,59 @@
+"""Kernel microbenchmarks: approximate-matmul deployment paths and
+attention implementations (CPU wall time; the derived column carries the
+TPU-relevant structural quantity)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.acl.library import default_library
+from repro.kernels.approx_matmul import approx_matmul, from_circuit
+from repro.kernels.flash_attention import attention
+
+from .common import emit, time_fn
+
+
+def run(seed: int = 0):
+    lib = default_library()
+    rng = np.random.default_rng(seed)
+    m = k = n = 256
+    x = jnp.asarray(rng.integers(-128, 128, (m, k)))
+    w = jnp.asarray(rng.integers(-128, 128, (k, n)))
+
+    for name in ("mul8s_exact", "mul8s_trunc4", "mul8s_mitchell",
+                 "mul8s_drum4"):
+        c = lib[name]
+        spec = from_circuit(c)
+
+        def mxu():
+            approx_matmul(x, w, spec).block_until_ready()
+
+        us = time_fn(mxu, repeat=3)
+        emit(f"kernels.approx_matmul.{name}.mxu", us,
+             f"cost_factor={c.deploy_cost_factor():.2f}")
+
+    c = lib["mul8s_trunc2"]
+    spec = from_circuit(c)
+
+    def lut():
+        approx_matmul(x[:64, :64], w[:64, :64], spec, path="lut").block_until_ready()
+
+    emit("kernels.approx_matmul.lut_behavioral_64", time_fn(lut, repeat=3),
+         "oracle")
+
+    b, h, s, d = 1, 4, 512, 64
+    q = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32)
+    kk = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32)
+    for impl, chunk in (("naive", 0), ("chunked", 128)):
+        def attn():
+            attention(q, kk, v, causal=True, impl=impl,
+                      chunk=chunk or s).block_until_ready()
+
+        # naive materializes the s^2 score tensor; chunked caps it at
+        # s*chunk — the structural memory ratio is the derived column
+        ratio = s / (chunk or s)
+        emit(f"kernels.attention.{impl}", time_fn(attn, repeat=3),
+             f"score_mem_ratio={ratio:.0f}x")

@@ -1,0 +1,40 @@
+"""The paper's DSE applied to an assigned LM architecture (the framework
+as a first-class training/serving feature): surrogate PCC + front quality
++ exploration timing on granite-8b's projection classes."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.accel.lm import LMAccelerator
+from repro.configs import get_config
+from repro.core.acl.library import default_library
+from repro.core.dse import DSEConfig, run_dse
+from repro.core.nsga2 import NSGA2Config
+
+from .common import emit
+
+
+def run(arch: str = "granite-8b", n_train: int = 24, generations: int = 6,
+        seed: int = 0):
+    accel = LMAccelerator(get_config(arch), seq=16)
+    lib = default_library()
+    cfg = DSEConfig(
+        n_train=n_train, n_qor_samples=1,
+        nsga=NSGA2Config(pop_size=24, n_parents=8,
+                         n_generations=generations, seed=seed),
+        seed=seed,
+    )
+    res = run_dse(accel, lib, cfg)
+    emit(f"lm_dse.{arch}.pcc_qor", 0.0, round(res.val_pcc["qor"], 3))
+    emit(f"lm_dse.{arch}.pcc_energy", 0.0, round(res.val_pcc["energy"], 3))
+    emit(f"lm_dse.{arch}.front_size", 0.0, int(res.front_mask.sum()))
+    emit(f"lm_dse.{arch}.surrogate_evals", 0.0, res.search.n_evaluated)
+    emit(f"lm_dse.{arch}.explore_s",
+         res.timings["explore"] * 1e6 / max(res.search.n_evaluated, 1),
+         round(res.timings["explore"], 2))
+    emit(f"lm_dse.{arch}.label_s", 0.0, round(res.timings["label"], 2))
+    best_psnr = -res.true_objectives[:, 0].max()
+    emit(f"lm_dse.{arch}.best_front_psnr", 0.0,
+         round(float(-res.true_objectives[:, 0].min()), 2))
+    return res

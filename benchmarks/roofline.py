@@ -1,0 +1,114 @@
+"""§Roofline — renders the per-(arch x shape x mesh) roofline table from
+the dry-run JSON cache (launch/dryrun.py) and emits summary rows.
+
+Also writes experiments/roofline.md (the table EXPERIMENTS.md embeds).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+from .common import emit
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+OUT_MD = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                      "roofline.md")
+
+_RECOMMEND = {
+    "compute": "raise arithmetic intensity (larger micro-batch, fuse "
+               "rank-k corrections)",
+    "memory": "cut activation traffic (fused attention kernel, chunk "
+              "remat, fewer weight re-gathers per micro-batch)",
+    "collective": "re-shard to cut wire bytes (kv/model placement, int8 "
+                  "gradient compression, hierarchical reduction)",
+}
+
+
+def load_records(d: str = DRYRUN_DIR) -> List[Dict]:
+    recs = []
+    if not os.path.isdir(d):
+        return recs
+    for fn in sorted(os.listdir(d)):
+        if fn.endswith(".json"):
+            with open(os.path.join(d, fn)) as f:
+                recs.append(json.load(f))
+    return recs
+
+
+def render_md(recs: List[Dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | t_comp (s) | t_mem (s) | t_coll (s) | "
+        "bottleneck | peak GiB (TPU est) | fits | useful/HLO | "
+        "what would move the dominant term |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("status") != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | "
+                f"{r.get('status','?')} | — | — | — | — |"
+            )
+            continue
+        rt = r["roofline"]
+        mem = r["memory"]["peak_tpu_estimate_bytes"] / 2**30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {rt['t_compute']:.3f} | {rt['t_memory']:.3f} "
+            f"| {rt['t_collective']:.3f} | {rt['bottleneck']} "
+            f"| {mem:.2f} | {'Y' if r['fits_hbm'] else 'N'} "
+            f"| {r['useful_flops_ratio']:.2f} "
+            f"| {_RECOMMEND[rt['bottleneck']]} |"
+        )
+    return "\n".join(lines)
+
+
+def run():
+    recs = load_records()
+    ok = [r for r in recs if r.get("status") == "ok"]
+    skip = [r for r in recs if r.get("status", "").startswith("SKIP")]
+    emit("roofline.cells_ok", 0.0, len(ok))
+    emit("roofline.cells_skipped", 0.0, len(skip))
+    if not ok:
+        return
+
+    md = render_md(recs)
+    os.makedirs(os.path.dirname(OUT_MD), exist_ok=True)
+    with open(OUT_MD, "w") as f:
+        f.write("# Roofline table (single-pod 16x16 + multi-pod 2x16x16)\n\n")
+        f.write(md + "\n")
+
+    by_bneck: Dict[str, int] = {}
+    for r in ok:
+        b = r["roofline"]["bottleneck"]
+        by_bneck[b] = by_bneck.get(b, 0) + 1
+    for b, n in sorted(by_bneck.items()):
+        emit(f"roofline.bottleneck.{b}", 0.0, n)
+
+    fits = sum(r["fits_hbm"] for r in ok)
+    emit("roofline.fits_16GiB", 0.0, f"{fits}/{len(ok)}")
+
+    # the three §Perf hillclimb picks
+    sp = [r for r in ok if r["mesh"] == "16x16"]
+    worst_useful = min(sp, key=lambda r: r["useful_flops_ratio"])
+    most_coll = max(sp, key=lambda r: r["roofline"]["t_collective"]
+                    / max(r["roofline"]["t_step"], 1e-12))
+    emit("roofline.worst_useful_cell", 0.0,
+         f"{worst_useful['arch']}/{worst_useful['shape']}"
+         f"={worst_useful['useful_flops_ratio']:.2f}")
+    emit("roofline.most_collective_cell", 0.0,
+         f"{most_coll['arch']}/{most_coll['shape']}")
+    # overall roofline fraction: useful model flops per device vs the
+    # time the dominant term implies
+    import numpy as np
+
+    fracs = []
+    for r in sp:
+        t_model = r["model_flops_per_device"] / 197e12
+        frac = t_model / max(r["roofline"]["t_step"], 1e-12)
+        fracs.append(frac)
+    emit("roofline.median_roofline_fraction", 0.0,
+         round(float(np.median(fracs)), 4))
+    return recs

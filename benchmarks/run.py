@@ -1,0 +1,72 @@
+"""Benchmark harness — one module per paper table/figure + roofline +
+kernels.  Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run              # all, reduced
+    PYTHONPATH=src python -m benchmarks.run --only fig5
+    PYTHONPATH=src python -m benchmarks.run --paper-scale  # full sizes
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from . import (
+    fig1_motivation,
+    fig5_pipelines,
+    fig6_models,
+    fig7_generations,
+    fig89_soa,
+    kernels,
+    lm_dse,
+    roofline,
+)
+from .common import emit, section
+
+BENCHES = {
+    "fig1": lambda paper: fig1_motivation.run(
+        n_variants=1000 if paper else 120),
+    "fig5": lambda paper: fig5_pipelines.run(
+        n_train=800 if paper else 80, n_test=200 if paper else 40),
+    "fig6": lambda paper: fig6_models.run(
+        n_train=800 if paper else 60, n_test=200 if paper else 30),
+    "fig7": lambda paper: fig7_generations.run(
+        generations=100 if paper else 20, pop=256 if paper else 64),
+    "fig89": lambda paper: fig89_soa.run(
+        budget=400 if paper else 60, generations=40 if paper else 8,
+        rows=(0, 1, 2, 3) if paper else (0, 1)),
+    "kernels": lambda paper: kernels.run(),
+    "lm_dse": lambda paper: lm_dse.run(
+        n_train=64 if paper else 24, generations=20 if paper else 6),
+    "roofline": lambda paper: roofline.run(),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(BENCHES))
+    ap.add_argument("--paper-scale", action="store_true",
+                    help="paper-sized populations/budgets (hours)")
+    args = ap.parse_args()
+    names = list(BENCHES) if not args.only else args.only.split(",")
+    print("name,us_per_call,derived")
+    failures = []
+    for name in names:
+        section(name)
+        t0 = time.time()
+        try:
+            BENCHES[name](args.paper_scale)
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            emit(f"{name}.FAILED", 0.0, repr(e))
+            failures.append(name)
+        section(f"{name} done in {time.time()-t0:.1f}s")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""The paper's exploration framework applied to a language model: search
+the per-projection-class approximate-circuit space of granite-8b
+(QoR = logits PSNR vs the exact model; cost = v5e roofline energy of the
+policy'd step).
+
+    PYTHONPATH=src python examples/dse_on_lm.py [--arch granite-8b]
+"""
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-8b")
+    args = ap.parse_args()
+    from repro.launch import dse_lm
+
+    sys.argv = ["dse_lm", "--arch", args.arch, "--n-train", "32",
+                "--generations", "8", "--pop", "24", "--parents", "8"]
+    dse_lm.main()
+
+
+if __name__ == "__main__":
+    main()

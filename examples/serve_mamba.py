@@ -1,0 +1,28 @@
+"""Serving example: batched greedy decoding from the attention-free
+falcon-mamba backbone (O(1) decode state — the long_500k family).
+
+    PYTHONPATH=src python examples/serve_mamba.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import get_config
+from repro.launch.serve import serve_batch
+from repro.models import reduced
+
+
+def main():
+    cfg = reduced(get_config("falcon-mamba-7b"))
+    print(f"serving {cfg.name}: layers={cfg.n_layers} d={cfg.d_model} "
+          f"(attention-free: decode state is O(1) in context length)")
+    tokens, tps = serve_batch(cfg, batch=4, prompt_len=32, gen=24)
+    print(f"generated {tokens.shape[0]}x{tokens.shape[1]} tokens "
+          f"@ {tps:.1f} tok/s (CPU, reduced config)")
+    print("sample:", tokens[0, -24:].tolist())
+
+
+if __name__ == "__main__":
+    main()

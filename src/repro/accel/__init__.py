@@ -1,0 +1,8 @@
+from .base import RANK_CHOICES, Accelerator, Slot
+from .gaussian import GaussianFilter
+from .hevc_dct import HEVCDct, MCMAccelerator
+
+__all__ = [
+    "Accelerator", "Slot", "RANK_CHOICES",
+    "GaussianFilter", "HEVCDct", "MCMAccelerator",
+]

@@ -1,0 +1,129 @@
+"""Accelerator abstraction: the paper's 'target application' objects.
+
+An ``Accelerator`` exposes
+  * ``slots`` — the approximable arithmetic sites (the DSE genome decodes
+    one circuit per slot, optionally plus a correction-rank gene),
+  * a bit-exact *behavioral* simulator (numpy, table-driven) for QoR,
+  * a *deployment* builder: the rank-k MXU JAX function whose compiled
+    cost_analysis provides the hardware ground truth (the Vivado
+    analogue; see core/features/synth.py),
+  * deterministic sample inputs.
+
+Genome convention: genes[i] indexes ``library.kind(slots[i].kind)``.
+With ``rank_genes=True`` the genome doubles: genes[n_slots + i] selects a
+correction rank in RANK_CHOICES for slot i (beyond-paper axis).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.acl.library import Circuit, Library
+
+__all__ = ["Slot", "Accelerator", "RANK_CHOICES", "decode_genome", "gene_sizes"]
+
+# rank gene vocabulary (beyond-paper DSE axis); index 0 = paper-faithful
+# deterministic rank (circuit.eff_rank)
+RANK_CHOICES: Tuple[Optional[int], ...] = (None, 0, 1, 2, 4, 8)
+
+
+@dataclass(frozen=True)
+class Slot:
+    name: str
+    kind: str        # "mul8u" | "mul8s" | "add16"
+    weight: float    # relative MAC count of this slot per output element
+
+
+class Accelerator:
+    """Base class; subclasses define slots + simulate() + deploy info."""
+
+    name: str = "base"
+    slots: List[Slot] = []
+
+    # --- genome ---------------------------------------------------------
+    def gene_sizes(self, library: Library, *, rank_genes: bool = False) -> np.ndarray:
+        return gene_sizes(self.slots, library, rank_genes=rank_genes)
+
+    def decode(
+        self, genome: np.ndarray, library: Library, *, rank_genes: bool = False
+    ) -> Tuple[List[Circuit], List[Optional[int]]]:
+        return decode_genome(genome, self.slots, library, rank_genes=rank_genes)
+
+    def exact_genome(self, library: Library, *, rank_genes: bool = False) -> np.ndarray:
+        g = [library.exact_index(s.kind) for s in self.slots]
+        if rank_genes:
+            # one rank gene per MULTIPLIER slot; index 1 => rank 0
+            g = g + [1] * len(self.mul_slot_indices())
+        return np.array(g, dtype=np.int64)
+
+    # --- behavior -------------------------------------------------------
+    def sample_inputs(self, n: int, seed: int = 0) -> np.ndarray:
+        raise NotImplementedError
+
+    def simulate(self, circuits: Sequence[Circuit], inputs: np.ndarray) -> np.ndarray:
+        """Bit-exact behavioral output under the slot assignment."""
+        raise NotImplementedError
+
+    def exact_output(self, inputs: np.ndarray) -> np.ndarray:
+        raise NotImplementedError
+
+    # --- deployment (for XLA synthesis) ----------------------------------
+    def matmul_shape(self) -> Tuple[int, int, int]:
+        """(m, k, n) of the accelerator's canonical matmul deployment form
+        (im2col for filters, transform matrix for DCT)."""
+        raise NotImplementedError
+
+    def slot_groups(self) -> List[Tuple[int, int]]:
+        """K-ranges of each *multiplier* slot in the deployment matmul."""
+        raise NotImplementedError
+
+    def mul_slot_indices(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s.kind.startswith("mul8")]
+
+    def mul_slot_constants(self) -> List[Optional[int]]:
+        """Per-multiplier-slot constant second operand (None = variable).
+        Constant-operand slots get column-conditional error features in the
+        cheap extractor."""
+        return [None] * len(self.mul_slot_indices())
+
+    # --- QoR --------------------------------------------------------------
+    def qor(
+        self, circuits: Sequence[Circuit], inputs: np.ndarray, peak: float | None = None
+    ) -> float:
+        from ..core import qor as qor_mod
+
+        ref = self.exact_output(inputs)
+        out = self.simulate(circuits, inputs)
+        return qor_mod.psnr(ref, out, peak)
+
+
+def gene_sizes(
+    slots: Sequence[Slot], library: Library, *, rank_genes: bool = False
+) -> np.ndarray:
+    sizes = [len(library.kind(s.kind)) for s in slots]
+    if rank_genes:
+        sizes += [len(RANK_CHOICES)] * len(
+            [s for s in slots if s.kind.startswith("mul8")]
+        )
+    return np.array(sizes, dtype=np.int64)
+
+
+def decode_genome(
+    genome: np.ndarray,
+    slots: Sequence[Slot],
+    library: Library,
+    *,
+    rank_genes: bool = False,
+) -> Tuple[List[Circuit], List[Optional[int]]]:
+    """-> (circuit per slot, correction rank per *multiplier* slot)."""
+    n = len(slots)
+    circuits = [library.kind(s.kind)[int(genome[i])] for i, s in enumerate(slots)]
+    mul_idx = [i for i, s in enumerate(slots) if s.kind.startswith("mul8")]
+    if rank_genes:
+        ranks = [RANK_CHOICES[int(genome[n + j])] for j in range(len(mul_idx))]
+    else:
+        ranks = [None] * len(mul_idx)
+    return circuits, ranks

@@ -1,0 +1,101 @@
+"""The paper's motivational accelerator (Fig. 1): a 3x3 Gaussian filter
+composed of nine 8-bit multipliers and eight 16-bit adders.
+
+Kernel = [[1,2,1],[2,4,2],[1,2,1]] / 16.  Products are at most 255*4 and
+the 9-term adder tree peaks below 2^16, so the 16-bit adder models apply
+without wraparound in the exact case.
+
+Deployment form: im2col matmul (n_pix, 9) @ (9, 1) with one K-column per
+multiplier slot (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.acl.library import Circuit
+from .base import Accelerator, Slot
+from .images import sample_images
+
+__all__ = ["GaussianFilter", "GAUSS_COEFFS"]
+
+GAUSS_COEFFS = np.array([1, 2, 1, 2, 4, 2, 1, 2, 1], dtype=np.int64)
+
+# adder-tree wiring: pairs reduced in order; 8 adders for 9 operands
+# a0=(p0,p1) a1=(p2,p3) a2=(p4,p5) a3=(p6,p7) a4=(a0,a1) a5=(a2,a3)
+# a6=(a4,a5) a7=(a6,p8)
+_TREE = [(0, 1), (2, 3), (4, 5), (6, 7), (9, 10), (11, 12), (13, 14), (15, 8)]
+
+
+def _im2col(images: np.ndarray) -> np.ndarray:
+    """(n, H, W) -> (n*(H-2)*(W-2), 9) sliding 3x3 windows."""
+    n, h, w = images.shape
+    cols = []
+    for dy in range(3):
+        for dx in range(3):
+            cols.append(images[:, dy : h - 2 + dy, dx : w - 2 + dx].reshape(n, -1))
+    return np.stack(cols, axis=-1).reshape(-1, 9)
+
+
+class GaussianFilter(Accelerator):
+    name = "gaussian3x3"
+    slots = [Slot(f"mul{i}", "mul8u", 1.0) for i in range(9)] + [
+        Slot(f"add{i}", "add16", 1.0) for i in range(8)
+    ]
+
+    def sample_inputs(self, n: int, seed: int = 0) -> np.ndarray:
+        return sample_images(n, size=32, seed=seed)
+
+    def _run(self, images: np.ndarray, muls: Sequence, adds: Sequence) -> np.ndarray:
+        cols = _im2col(images)  # (m, 9)
+        prods = [muls[i](cols[:, i], GAUSS_COEFFS[i]) for i in range(9)]
+        vals = list(prods)  # indices 0..8; adder outputs appended as 9..16
+        for fn, (ia, ib) in zip(adds, _TREE):
+            vals.append(fn(vals[ia], vals[ib]))
+        acc = vals[-1]
+        out = acc >> 4  # /16
+        n, h, w = images.shape
+        return out.reshape(n, h - 2, w - 2)
+
+    def simulate(self, circuits: Sequence[Circuit], inputs: np.ndarray) -> np.ndarray:
+        muls = [c.fn for c in circuits[:9]]
+        adds = [c.fn for c in circuits[9:]]
+        return self._run(inputs, muls, adds)
+
+    def exact_output(self, inputs: np.ndarray) -> np.ndarray:
+        exact_mul = lambda a, b: a * b
+        exact_add = lambda a, b: a + b
+        return self._run(inputs, [exact_mul] * 9, [exact_add] * 8)
+
+    # --- deployment -------------------------------------------------------
+    def matmul_shape(self) -> Tuple[int, int, int]:
+        return (900, 9, 1)  # 32x32 image -> 900 windows
+
+    def slot_groups(self) -> List[Tuple[int, int]]:
+        return [(i, i + 1) for i in range(9)]
+
+    def mul_slot_constants(self):
+        return [int(c) for c in GAUSS_COEFFS]
+
+    def build_deploy(self, specs: Sequence, inputs: Optional[np.ndarray] = None):
+        """-> (jax_fn, args): the rank-k MXU deployment of this variant.
+
+        Weight operand = the Gaussian coefficients (constants); activation
+        operand = the im2col'd image windows.
+        """
+        import jax.numpy as jnp
+
+        from ..kernels.approx_matmul import grouped_matmul
+
+        if inputs is None:
+            inputs = self.sample_inputs(1, seed=1)
+        x = jnp.asarray(_im2col(inputs))                 # (m, 9)
+        w = jnp.asarray(GAUSS_COEFFS.reshape(9, 1))      # (9, 1)
+        groups = self.slot_groups()
+
+        def fn(x, w):
+            return grouped_matmul(x, w, specs, groups)
+
+        return fn, (x, w)

@@ -1,0 +1,249 @@
+"""HEVC 4x4 integer DCT — the paper's evaluation application (§IV).
+
+The forward transform matrix (HEVC core transform, [25]):
+
+    C = [[64,  64,  64,  64],
+         [83,  36, -36, -83],
+         [64, -64, -64,  64],
+         [36, -83,  83, -36]]
+
+Each output row i is one multiple-constant-multiplication block MCM_i:
+four signed 8-bit multipliers (|constants| <= 83) + a 3-adder tree.  The
+2-D transform applies the four MCMs column-wise, renormalizes (>>8, the
+HEVC first-stage shift adapted to keep the 8-bit circuit domain), then
+row-wise.  QoR = PSNR of the exact-IDCT reconstruction from approximate
+coefficients vs the reconstruction from exact coefficients, over 4x4
+blocks of the synthetic image set.
+
+Adders run on 16-bit two's-complement patterns via ``signed16``.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.acl.library import Circuit
+from .base import Accelerator, Slot
+from .images import sample_images
+
+__all__ = ["HEVC_C", "MCMAccelerator", "HEVCDct", "signed16"]
+
+HEVC_C = np.array(
+    [
+        [64, 64, 64, 64],
+        [83, 36, -36, -83],
+        [64, -64, -64, 64],
+        [36, -83, 83, -36],
+    ],
+    dtype=np.int64,
+)
+
+_SHIFT1 = 8  # stage-1 renormalization to stay in the signed 8-bit domain
+
+
+def signed16(fn: Callable) -> Callable:
+    """Lift an unsigned 16-bit adder model to signed two's complement:
+    wrap to 16 bits, apply, sign-extend."""
+
+    def wrapped(a, b):
+        a16 = np.asarray(a, dtype=np.int64) & 0xFFFF
+        b16 = np.asarray(b, dtype=np.int64) & 0xFFFF
+        s = np.asarray(fn(a16, b16), dtype=np.int64) & 0xFFFF
+        return np.where(s >= 0x8000, s - 0x10000, s)
+
+    return wrapped
+
+
+def _blocks(images: np.ndarray) -> np.ndarray:
+    """(n, H, W) uint8 -> (m, 4, 4) signed residual blocks (pixel - 128)."""
+    n, h, w = images.shape
+    h4, w4 = h - h % 4, w - w % 4
+    x = images[:, :h4, :w4].reshape(n, h4 // 4, 4, w4 // 4, 4)
+    x = x.transpose(0, 1, 3, 2, 4).reshape(-1, 4, 4)
+    return x.astype(np.int64) - 128
+
+
+def _mcm_apply(row: int, x: np.ndarray, muls, adds) -> np.ndarray:
+    """y = sum_j C[row, j] * x[..., j] with per-slot circuits.
+
+    x: (..., 4) signed 8-bit domain values."""
+    coeffs = HEVC_C[row]
+    # mul8s behavioral models are sign-magnitude wrapped: f(x, -c) = -f(x, c)
+    prods = [muls[j](x[..., j], int(coeffs[j])) for j in range(4)]
+    s0 = adds[0](prods[0], prods[1])
+    s1 = adds[1](prods[2], prods[3])
+    return adds[2](s0, s1)
+
+
+def _rshift_round(v: np.ndarray, k: int) -> np.ndarray:
+    return (v + (1 << (k - 1))) >> k
+
+
+class MCMAccelerator(Accelerator):
+    """One MCM block (paper: MCM1..MCM4 of the HEVC use-case)."""
+
+    def __init__(self, row: int):
+        assert 0 <= row < 4
+        self.row = row
+        self.name = f"mcm{row + 1}"
+        self.slots = [Slot(f"mul{j}", "mul8s", 1.0) for j in range(4)] + [
+            Slot(f"add{j}", "add16", 1.0) for j in range(3)
+        ]
+
+    def sample_inputs(self, n: int, seed: int = 0) -> np.ndarray:
+        imgs = sample_images(n, size=32, seed=seed)
+        return _blocks(imgs).reshape(-1, 4)  # row vectors of residuals
+
+    def _decode(self, circuits: Sequence[Circuit]):
+        muls = [c.fn for c in circuits[:4]]
+        adds = [signed16(c.fn) for c in circuits[4:]]
+        return muls, adds
+
+    def simulate(self, circuits: Sequence[Circuit], inputs: np.ndarray) -> np.ndarray:
+        muls, adds = self._decode(circuits)
+        return _mcm_apply(self.row, inputs, muls, adds)
+
+    def exact_output(self, inputs: np.ndarray) -> np.ndarray:
+        return inputs @ HEVC_C[self.row]
+
+    def matmul_shape(self) -> Tuple[int, int, int]:
+        return (1024, 4, 1)
+
+    def slot_groups(self) -> List[Tuple[int, int]]:
+        return [(j, j + 1) for j in range(4)]
+
+    def mul_slot_constants(self):
+        return [int(c) for c in HEVC_C[self.row]]
+
+    def build_deploy(self, specs: Sequence, inputs: Optional[np.ndarray] = None):
+        import jax.numpy as jnp
+
+        from ..kernels.approx_matmul import grouped_matmul
+
+        if inputs is None:
+            inputs = self.sample_inputs(1, seed=1)
+        x = jnp.asarray(inputs)                              # (m, 4)
+        w = jnp.asarray(HEVC_C[self.row].reshape(4, 1))      # signed constants
+        groups = self.slot_groups()
+
+        def fn(x, w):
+            return grouped_matmul(x, w, specs, groups)
+
+        return fn, (x, w)
+
+
+class HEVCDct(Accelerator):
+    """Full 2-D 4x4 approximate DCT: 16 mul8s + 12 add16 slots (four MCM
+    blocks), applied column-wise then row-wise with a >>8 renorm."""
+
+    name = "hevc_dct4x4"
+    deploy_passes = 2  # column stage + row stage
+
+    def __init__(self):
+        self.mcms = [MCMAccelerator(r) for r in range(4)]
+        self.slots = []
+        for m in self.mcms:
+            self.slots += [
+                Slot(f"{m.name}_{s.name}", s.kind, s.weight) for s in m.slots
+            ]
+
+    def sample_inputs(self, n: int, seed: int = 0) -> np.ndarray:
+        return sample_images(n, size=32, seed=seed)
+
+    def _split(self, circuits: Sequence[Circuit]):
+        per = []
+        for r in range(4):
+            sub = circuits[r * 7 : (r + 1) * 7]
+            muls = [c.fn for c in sub[:4]]
+            adds = [signed16(c.fn) for c in sub[4:]]
+            per.append((muls, adds))
+        return per
+
+    def _transform(self, blocks: np.ndarray, per) -> np.ndarray:
+        """blocks: (m, 4, 4) -> coefficients (m, 4, 4)."""
+        # stage 1: columns.  T[i, c] = MCM_i(X[:, c])
+        t = np.stack(
+            [
+                _mcm_apply(r, blocks.transpose(0, 2, 1), per[r][0], per[r][1])
+                for r in range(4)
+            ],
+            axis=1,
+        )  # (m, 4(row), 4(col))
+        t = np.clip(_rshift_round(t, _SHIFT1), -128, 127)
+        # stage 2: rows.  Y[i, k] = MCM_k(T[i, :])  (transform the rows)
+        y = np.stack(
+            [_mcm_apply(r, t, per[r][0], per[r][1]) for r in range(4)],
+            axis=2,
+        )  # (m, 4, 4)
+        return y
+
+    def _reconstruct(self, coeffs: np.ndarray) -> np.ndarray:
+        """Exact float inverse of the renormalized forward transform."""
+        cinv = np.linalg.inv(HEVC_C.astype(np.float64))
+        # forward was  Y ~= (C X C^T) / 2^8  (stage-1 shift); invert:
+        x = cinv @ (coeffs.astype(np.float64) * (1 << _SHIFT1)) @ cinv.T
+        return x
+
+    def simulate(self, circuits: Sequence[Circuit], inputs: np.ndarray) -> np.ndarray:
+        per = self._split(circuits)
+        return self._reconstruct(self._transform(_blocks(inputs), per))
+
+    def exact_output(self, inputs: np.ndarray) -> np.ndarray:
+        exact = [
+            ([lambda a, b: a * b] * 4, [lambda a, b: a + b] * 3) for _ in range(4)
+        ]
+        return self._reconstruct(self._transform(_blocks(inputs), exact))
+
+    def matmul_shape(self) -> Tuple[int, int, int]:
+        return (1024, 4, 4)
+
+    def slot_groups(self) -> List[Tuple[int, int]]:
+        # mul slot j of MCM r contracts column j; groups returned MCM-major
+        return [(j, j + 1) for _ in range(4) for j in range(4)]
+
+    def mul_slot_constants(self):
+        return [int(HEVC_C[r, j]) for r in range(4) for j in range(4)]
+
+    def build_deploy(self, specs: Sequence, inputs: Optional[np.ndarray] = None):
+        """Deployment: two grouped matmuls (m,4)@(4,4) with per-(row, j)
+        circuit specs, renorm between stages."""
+        import jax.numpy as jnp
+
+        from ..kernels.approx_matmul import approx_matmul
+
+        if inputs is None:
+            inputs = self.sample_inputs(1, seed=1)
+        x = jnp.asarray(_blocks(inputs).reshape(-1, 4))  # (m*4, 4) rows
+        w = jnp.asarray(HEVC_C.T)                        # (4, 4): col r = MCM_r
+
+        def fn(x, w):
+            outs = []
+            for r in range(4):
+                cols = []
+                for j in range(4):
+                    spec = specs[r * 4 + j]
+                    cols.append(
+                        approx_matmul(x[:, j : j + 1], w[j : j + 1, r : r + 1], spec)
+                    )
+                outs.append(sum(cols))
+            y = jnp.concatenate(outs, axis=1)  # (m*4, 4) stage-1
+            y = jnp.clip(jnp.round(y / (1 << _SHIFT1)), -128, 127)
+            # stage 2 on the transposed intermediate (same circuit set)
+            outs2 = []
+            for r in range(4):
+                cols = []
+                for j in range(4):
+                    spec = specs[r * 4 + j]
+                    cols.append(
+                        approx_matmul(
+                            y[:, j : j + 1].astype(jnp.int32),
+                            w[j : j + 1, r : r + 1],
+                            spec,
+                        )
+                    )
+                outs2.append(sum(cols))
+            return jnp.concatenate(outs2, axis=1)
+
+        return fn, (x, w)

@@ -1,0 +1,4 @@
+from . import ckpt
+from .fault_tolerance import FailureInjector, run_resilient
+
+__all__ = ["ckpt", "FailureInjector", "run_resilient"]

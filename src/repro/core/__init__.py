@@ -1,0 +1,12 @@
+# The paper's primary contribution: surrogate-guided NSGA-II design-space
+# exploration of approximate accelerators, retargeted from FPGA to TPU.
+# Subpackages: acl (circuit library), features (cheap/synth extraction,
+# pipelines A-F), surrogates (~20 regression models), nsga2/pareto/dse
+# (the search), hw (v5e roofline), qor (PSNR metrics).
+#
+# NOTE: dse/features are imported lazily (import repro.core.dse) to avoid
+# a circular import with repro.accel, which depends on repro.core.acl.
+from . import hw, pareto, qor
+from .nsga2 import NSGA2Config, nsga2
+
+__all__ = ["hw", "pareto", "qor", "NSGA2Config", "nsga2"]

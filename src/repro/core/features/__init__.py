@@ -1,0 +1,11 @@
+from . import cheap, pipelines, synth
+from .cheap import circuit_features_cheap, variant_features
+from .pipelines import PIPELINES, build_extractor, evaluate_pipeline
+from .synth import circuit_features_synth, label_variants, synthesize_variant
+
+__all__ = [
+    "cheap", "synth", "pipelines",
+    "circuit_features_cheap", "variant_features",
+    "circuit_features_synth", "label_variants", "synthesize_variant",
+    "PIPELINES", "build_extractor", "evaluate_pipeline",
+]

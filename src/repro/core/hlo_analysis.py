@@ -1,0 +1,365 @@
+"""Trip-count-aware cost analysis of post-optimization HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts every while-loop body ONCE, so
+any scanned model (layers / microbatches / KV chunks) is undercounted by
+orders of magnitude.  This module re-derives the §Roofline inputs from
+``compiled.as_text()`` — the partitioned, optimized module, whose shapes
+are already per-device — using the ``known_trip_count`` backend_config
+XLA attaches to its while ops:
+
+  * FLOPs        — 2*MNK for every dot (incl. batch dims), 2*out*k for
+                   convolutions, multiplied through the call graph
+                   (while bodies x trip count; fusion/call/cond x 1).
+  * HBM bytes    — per *top-level* op (= kernel-launch granularity):
+                   result + operand bytes.  Ops inside fusion
+                   subcomputations contribute no traffic (they live in
+                   registers/VMEM); tuple/GTE/bitcast/parameter are free.
+  * collective bytes — ring-model accounting per op class (same
+                   conventions as core.hw.collective_bytes_from_hlo),
+                   with loop multipliers applied.
+
+This is an approximation (elementwise FLOPs ignored; buffer reuse within
+a kernel ignored) but is exact for the matmul-dominated workloads here
+and, unlike XLA's aggregate, correct across loops.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+import numpy as np
+
+from .hw import DTYPE_BYTES
+
+__all__ = ["HloCost", "analyze_hlo"]
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^)]*\)|\w+\[[\d,]*\](?:\{[^}]*\})?)\s*"
+    r"([\w\-]+)\((.*)$"
+)
+# computation headers start at column 0: "%name (params...) -> type {"
+# (params may contain nested parens, so match only the leading name)
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"(?:calls|to_apply|body)=%([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+_FREE_OPS = {
+    "tuple", "get-tuple-element", "bitcast", "parameter", "constant",
+    "after-all", "opt-barrier", "partition-id", "replica-id", "iota",
+}
+
+_COLLECTIVES = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+}
+
+
+def _shape_info(type_str: str) -> Tuple[int, int]:
+    """-> (total elements, total bytes) over possibly-tuple type."""
+    elems = 0
+    byts = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in DTYPE_BYTES and dtype != "pred":
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        byts += n * DTYPE_BYTES.get(dtype, 4)
+    return elems, byts
+
+
+@dataclass
+class _Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str            # everything after the opening paren
+    result_bytes: int = 0
+    result_elems: int = 0
+
+
+@dataclass
+class _Computation:
+    name: str
+    ops: List[_Op] = field(default_factory=list)
+    symbols: Dict[str, str] = field(default_factory=dict)  # op name -> type
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_detail: Dict[str, float] = field(default_factory=dict)
+    n_while: int = 0
+    dot_flops_by_site: Dict[str, float] = field(default_factory=dict)
+    hbm_by_site: Dict[str, float] = field(default_factory=dict)
+
+    def add(self, other: "HloCost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        self.collective_bytes += other.collective_bytes * mult
+        self.n_while += other.n_while
+        for k, v in other.collective_detail.items():
+            self.collective_detail[k] = (
+                self.collective_detail.get(k, 0.0) + v * mult
+            )
+        for k, v in other.dot_flops_by_site.items():
+            self.dot_flops_by_site[k] = (
+                self.dot_flops_by_site.get(k, 0.0) + v * mult
+            )
+        for k, v in other.hbm_by_site.items():
+            self.hbm_by_site[k] = self.hbm_by_site.get(k, 0.0) + v * mult
+
+
+def _parse(text: str) -> Tuple[Dict[str, _Computation], Optional[str], Set[str]]:
+    comps: Dict[str, _Computation] = {}
+    entry: Optional[str] = None
+    fusion_called: Set[str] = set()
+    cur: Optional[_Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m:
+                cur = _Computation(m.group(2))
+                if m.group(1):
+                    entry = cur.name
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        op = _Op(m.group(1), m.group(2), m.group(3), m.group(4))
+        op.result_elems, op.result_bytes = _shape_info(op.type_str)
+        cur.ops.append(op)
+        cur.symbols[op.name] = op.type_str
+        if op.opcode == "fusion":
+            cm = _CALLS_RE.search(op.rest)
+            if cm:
+                fusion_called.add(cm.group(1))
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps, entry, fusion_called
+
+
+def _dot_flops(op: _Op, symbols: Dict[str, str]) -> float:
+    # contraction size from the lhs operand's shape
+    cm = _CONTRACT_RE.search(op.rest)
+    operands = _OPERAND_RE.findall(op.rest.split(")", 1)[0])
+    k = 1
+    if cm and operands:
+        lhs_type = symbols.get(operands[0], "")
+        sm = _SHAPE_RE.search(lhs_type)
+        if sm:
+            dims = [int(d) for d in sm.group(2).split(",") if d]
+            for ci in cm.group(1).split(","):
+                if ci != "" and int(ci) < len(dims):
+                    k *= dims[int(ci)]
+    return 2.0 * op.result_elems * k
+
+
+def _conv_flops(op: _Op, symbols: Dict[str, str]) -> float:
+    # 2 * out_elems * (kernel elems / output features): approximate via
+    # rhs (kernel) size / out_features
+    operands = _OPERAND_RE.findall(op.rest.split(")", 1)[0])
+    if len(operands) < 2:
+        return 0.0
+    rhs_type = symbols.get(operands[1], "")
+    k_elems, _ = _shape_info(rhs_type)
+    out_feat = 1
+    sm = _SHAPE_RE.search(op.type_str)
+    if sm:
+        dims = [int(d) for d in sm.group(2).split(",") if d]
+        if dims:
+            out_feat = dims[-1]
+    spatial = max(k_elems // max(out_feat, 1), 1)
+    return 2.0 * op.result_elems * spatial
+
+
+def _operand_names(op: _Op) -> List[str]:
+    return _OPERAND_RE.findall(op.rest.split(")", 1)[0])
+
+
+def _operand_bytes(op: _Op, symbols: Dict[str, str]) -> int:
+    total = 0
+    for name in _operand_names(op):
+        t = symbols.get(name)
+        if t:
+            total += _shape_info(t)[1]
+    return total
+
+
+_SLICING_OPS = {"dynamic-slice", "slice", "gather"}
+_UPDATE_OPS = {"dynamic-update-slice", "scatter"}
+
+
+def _op_traffic(op: _Op, symbols: Dict[str, str],
+                comps: Optional[Dict[str, "_Computation"]] = None) -> float:
+    """HBM bytes touched by one top-level op.
+
+    Slicing ops read only the slice, not the whole operand (a scan's
+    per-iteration dynamic-slice on the stacked weights would otherwise
+    count the full stack every iteration — a ~100x overcount).  In-place
+    update ops touch ~2x the update region.  Fusions are charged per
+    *parameter usage*: parameters consumed only by slicing/update ops
+    inside the fusion are charged at slice granularity.
+    """
+    oc = op.opcode
+    if oc in _SLICING_OPS:
+        return 2.0 * op.result_bytes
+    if oc in _UPDATE_OPS:
+        ops_names = _operand_names(op)
+        upd = symbols.get(ops_names[1], "") if len(ops_names) > 1 else ""
+        ub = _shape_info(upd)[1] if upd else op.result_bytes
+        return 2.0 * ub
+    if oc == "fusion" and comps is not None:
+        cm = _CALLS_RE.search(op.rest)
+        child = comps.get(cm.group(1)) if cm else None
+        if child is not None:
+            # positional parameter map
+            par_names: Dict[int, str] = {}
+            for cop in child.ops:
+                if cop.opcode == "parameter":
+                    idx_str = cop.rest.split(")", 1)[0]
+                    try:
+                        par_names[int(idx_str)] = cop.name
+                    except ValueError:
+                        pass
+            operands = _operand_names(op)
+            total = 0.0
+            for i, name in enumerate(operands):
+                t = symbols.get(name)
+                full = _shape_info(t)[1] if t else 0
+                pname = par_names.get(i)
+                if pname is None:
+                    total += full
+                    continue
+                users = [
+                    u for u in child.ops
+                    if pname in _operand_names(u) and u.opcode != "parameter"
+                ]
+                if users and all(
+                    u.opcode in _SLICING_OPS
+                    or (u.opcode in _UPDATE_OPS
+                        and _operand_names(u)[0] == pname)
+                    for u in users
+                ):
+                    sliced = 0.0
+                    for u in users:
+                        if u.opcode in _SLICING_OPS:
+                            sliced += u.result_bytes
+                        else:
+                            unames = _operand_names(u)
+                            ut = child.symbols.get(unames[1], "") if len(unames) > 1 else ""
+                            sliced += _shape_info(ut)[1] if ut else u.result_bytes
+                    total += min(sliced, full)
+                else:
+                    total += full
+            # fusion result: in-place DUS root writes only the update
+            root = child.ops[-1] if child.ops else None
+            if root is not None and root.opcode in _UPDATE_OPS:
+                unames = _operand_names(root)
+                ut = child.symbols.get(unames[1], "") if len(unames) > 1 else ""
+                total += _shape_info(ut)[1] if ut else op.result_bytes
+            else:
+                total += op.result_bytes
+            return total
+    return float(op.result_bytes + _operand_bytes(op, symbols))
+
+
+def _collective_bytes(op: _Op, symbols: Dict[str, str]) -> Tuple[str, float]:
+    kind = op.opcode.replace("-start", "").replace("-done", "")
+    if op.opcode.endswith("-done"):
+        return kind, 0.0  # counted at -start
+    if kind == "all-reduce":
+        return kind, 2.0 * op.result_bytes
+    if kind == "all-gather":
+        return kind, float(op.result_bytes)
+    # reduce-scatter / all-to-all / collective-permute: operand size
+    return kind, float(_operand_bytes(op, symbols) or op.result_bytes)
+
+
+def analyze_hlo(text: str) -> HloCost:
+    comps, entry, fusion_called = _parse(text)
+    memo: Dict[Tuple[str, bool], HloCost] = {}
+
+    def evaluate(name: str, traffic: bool) -> HloCost:
+        key = (name, traffic)
+        if key in memo:
+            return memo[key]
+        memo[key] = HloCost()  # cycle guard (HLO is acyclic, but be safe)
+        comp = comps.get(name)
+        if comp is None:
+            return memo[key]
+        cost = HloCost()
+        for op in comp.ops:
+            oc = op.opcode
+            base = oc.replace("-start", "").replace("-done", "")
+            if oc == "dot":
+                f = _dot_flops(op, comp.symbols)
+                cost.flops += f
+                site = name
+                cost.dot_flops_by_site[site] = (
+                    cost.dot_flops_by_site.get(site, 0.0) + f
+                )
+            elif oc == "convolution":
+                cost.flops += _conv_flops(op, comp.symbols)
+            if base in _COLLECTIVES:
+                kind, b = _collective_bytes(op, comp.symbols)
+                cost.collective_bytes += b
+                cost.collective_detail[kind] = (
+                    cost.collective_detail.get(kind, 0.0) + b
+                )
+            # traffic accounting at kernel-launch granularity
+            if traffic and oc not in _FREE_OPS and oc != "while":
+                b = _op_traffic(op, comp.symbols, comps)
+                cost.hbm_bytes += b
+                site = f"{name}::{oc}"
+                cost.hbm_by_site[site] = cost.hbm_by_site.get(site, 0.0) + b
+            # recurse into called computations
+            if oc == "while":
+                cost.n_while += 1
+                trip = 1
+                tm = _TRIP_RE.search(op.rest)
+                if tm:
+                    trip = int(tm.group(1))
+                bm = _CALLS_RE.search(op.rest)
+                cm2 = _COND_RE.search(op.rest)
+                if bm:
+                    cost.add(evaluate(bm.group(1), traffic), trip)
+                if cm2:
+                    cost.add(evaluate(cm2.group(1), traffic), trip + 1)
+            elif oc == "conditional":
+                brm = _BRANCH_RE.search(op.rest)
+                if brm:
+                    branches = _OPERAND_RE.findall(brm.group(1))
+                    # worst case: the most expensive branch
+                    subs = [evaluate(b, traffic) for b in branches]
+                    if subs:
+                        worst = max(subs, key=lambda c: c.flops + c.hbm_bytes)
+                        cost.add(worst)
+            else:
+                cm3 = _CALLS_RE.search(op.rest)
+                if cm3 and cm3.group(1) in comps:
+                    child = cm3.group(1)
+                    # fusion internals: no HBM traffic, flops still count
+                    cost.add(evaluate(child, traffic and child not in fusion_called))
+        memo[key] = cost
+        return cost
+
+    if entry is None:
+        return HloCost()
+    return evaluate(entry, True)

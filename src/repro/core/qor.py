@@ -1,0 +1,49 @@
+"""Quality-of-result metrics.
+
+The paper's QoR is average PSNR of the accelerator's output against the
+exact accelerator's output over a set of input samples (images for the
+Gaussian filter / HEVC DCT).  For the LM retarget we add logits-PSNR and
+cross-entropy delta (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["psnr", "mean_psnr", "ce_delta", "PSNR_CAP"]
+
+# Identical outputs would give +inf PSNR; the paper's plots saturate around
+# this value, and a finite cap keeps regression targets well-conditioned.
+PSNR_CAP = 100.0
+
+
+def psnr(ref: np.ndarray, out: np.ndarray, peak: float | None = None) -> float:
+    """Peak signal-to-noise ratio in dB; capped at PSNR_CAP for exactness."""
+    ref = np.asarray(ref, dtype=np.float64)
+    out = np.asarray(out, dtype=np.float64)
+    if peak is None:
+        peak = float(np.max(np.abs(ref))) or 1.0
+    mse = float(np.mean((ref - out) ** 2))
+    if mse == 0.0:
+        return PSNR_CAP
+    return float(min(10.0 * np.log10(peak * peak / mse), PSNR_CAP))
+
+
+def mean_psnr(refs, outs, peak: float | None = None) -> float:
+    """Average PSNR over a batch of samples (paper: 'average PSNR ... for a
+    set of input signal samples')."""
+    vals = [psnr(r, o, peak) for r, o in zip(refs, outs)]
+    return float(np.mean(vals))
+
+
+def ce_delta(logits_ref: np.ndarray, logits_out: np.ndarray, labels: np.ndarray) -> float:
+    """Cross-entropy degradation of approximate logits vs exact logits."""
+
+    def ce(logits):
+        logits = logits - logits.max(axis=-1, keepdims=True)
+        logz = np.log(np.exp(logits).sum(axis=-1))
+        n = labels.size
+        gold = logits.reshape(n, -1)[np.arange(n), labels.reshape(-1)]
+        return float(np.mean(logz.reshape(-1) - gold))
+
+    return ce(np.asarray(logits_out, np.float64)) - ce(np.asarray(logits_ref, np.float64))

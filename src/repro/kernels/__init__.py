@@ -1,0 +1,11 @@
+# Pallas TPU kernels for the compute hot-spots (validated in interpret
+# mode on CPU; see each package's kernel.py for the VMEM tiling):
+#   approx_matmul    — the paper's technique: LUT behavioral oracle +
+#                      rank-k MXU deployment
+#   flash_attention  — fused blockwise attention (removes the dominant
+#                      training-traffic class, §Perf)
+#   selective_scan   — fused Mamba-1 scan (removes the SSM state-stream
+#                      traffic, §Perf cell B)
+from . import approx_matmul, flash_attention, selective_scan
+
+__all__ = ["approx_matmul", "flash_attention", "selective_scan"]

@@ -1,0 +1,16 @@
+from .kernel import lut_matmul_pallas, rank_k_mxu
+from .ops import (
+    ApproxSpec,
+    approx_matmul,
+    dequantize,
+    from_circuit,
+    grouped_matmul,
+    quantize_sym,
+)
+from .ref import lut_matmul, rank_k_matmul
+
+__all__ = [
+    "ApproxSpec", "from_circuit", "approx_matmul", "grouped_matmul",
+    "quantize_sym", "dequantize",
+    "lut_matmul", "rank_k_matmul", "lut_matmul_pallas", "rank_k_mxu",
+]

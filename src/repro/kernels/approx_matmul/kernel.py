@@ -1,0 +1,164 @@
+"""Pallas TPU kernels for approximate integer matmul.
+
+Two kernels mirror the two reference semantics in ``ref.py``:
+
+* ``rank_k_mxu``   — the deployment path.  Per (bm, bn) output tile we
+  accumulate over K-blocks: one exact MXU matmul on the dequantized
+  operands plus ONE fused MXU matmul for all r correction terms, by
+  packing the rank dimension into the contraction:  (bm, bk*r) @ (bk*r,
+  bn).  The 256-entry U/V lookup tables live in VMEM (256*r*4 B each) and
+  are gathered per tile.  fp32 accumulation in VMEM scratch.
+
+* ``lut_matmul``   — the behavioral oracle ("DSP blocks disabled"
+  analogue): every scalar product is a VMEM gather from the exhaustive
+  (256,256) product table; int32 accumulation.  Not a performance path —
+  it exists so the bit-exact semantics are *also* expressed as a tiled
+  TPU kernel and validated against the numpy models.
+
+Block shapes default to MXU-aligned (128, 128) tiles with bk=128.
+Validated with interpret=True on CPU (tests/test_kernels.py); on real TPU
+the gathers lower to VMEM dynamic-slices — acceptable for r<=8 tables.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["rank_k_mxu", "lut_matmul_pallas"]
+
+
+def _rank_k_kernel(xi_ref, wi_ref, u_ref, v_ref, out_ref, acc_ref, *, offset, nk):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    xi = xi_ref[...]                         # (bm, bk) int32 table indices
+    wi = wi_ref[...]                         # (bk, bn) int32 table indices
+    xf = (xi - offset).astype(jnp.float32)   # dequantized operand values
+    wf = (wi - offset).astype(jnp.float32)
+    acc = acc_ref[...] + jax.lax.dot(
+        xf, wf, preferred_element_type=jnp.float32
+    )
+
+    r = u_ref.shape[1]
+    if r > 0:
+        bm, bk = xi.shape
+        bn = wi.shape[1]
+        ux = jnp.take(u_ref[...], xi.reshape(-1), axis=0)  # (bm*bk, r)
+        vw = jnp.take(v_ref[...], wi.reshape(-1), axis=0)  # (bk*bn, r)
+        # pack rank into the contraction: (bm, bk*r) @ (bk*r, bn)
+        ux = ux.reshape(bm, bk * r)
+        vw = vw.reshape(bk, bn, r).transpose(0, 2, 1).reshape(bk * r, bn)
+        acc = acc + jax.lax.dot(ux, vw, preferred_element_type=jnp.float32)
+
+    acc_ref[...] = acc
+
+    @pl.when(k == nk - 1)
+    def _done():
+        out_ref[...] = acc_ref[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("signed", "bm", "bn", "bk", "interpret"),
+)
+def rank_k_mxu(
+    x: jnp.ndarray,    # (m, k) integer-valued (int32) 8-bit domain
+    w: jnp.ndarray,    # (k, n)
+    u: jnp.ndarray,    # (256, r) f32
+    v: jnp.ndarray,    # (256, r) f32
+    *,
+    signed: bool = False,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    m, kdim = x.shape
+    _, n = w.shape
+    assert m % bm == 0 and n % bn == 0 and kdim % bk == 0, (m, n, kdim)
+    offset = 128 if signed else 0
+    xi = x.astype(jnp.int32) + offset
+    wi = w.astype(jnp.int32) + offset
+    nk = kdim // bk
+    grid = (m // bm, n // bn, nk)
+    kernel = functools.partial(_rank_k_kernel, offset=offset, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((256, u.shape[1]), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((256, v.shape[1]), lambda i, j, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(xi, wi, u.astype(jnp.float32), v.astype(jnp.float32))
+
+
+def _lut_kernel(xi_ref, wi_ref, tab_ref, out_ref, acc_ref, *, nk):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    xi = xi_ref[...]          # (bm, bk)
+    wi = wi_ref[...]          # (bk, bn)
+    flat = tab_ref[...].reshape(-1)
+    idx = xi[:, :, None] * 256 + wi[None, :, :]       # (bm, bk, bn)
+    prods = jnp.take(flat, idx.reshape(-1), axis=0).reshape(idx.shape)
+    acc_ref[...] = acc_ref[...] + prods.sum(axis=1).astype(jnp.int32)
+
+    @pl.when(k == nk - 1)
+    def _done():
+        out_ref[...] = acc_ref[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("signed", "bm", "bn", "bk", "interpret"),
+)
+def lut_matmul_pallas(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    table: jnp.ndarray,   # (256, 256) int32
+    *,
+    signed: bool = False,
+    bm: int = 64,
+    bn: int = 64,
+    bk: int = 64,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    m, kdim = x.shape
+    _, n = w.shape
+    assert m % bm == 0 and n % bn == 0 and kdim % bk == 0, (m, n, kdim)
+    offset = 128 if signed else 0
+    xi = x.astype(jnp.int32) + offset
+    wi = w.astype(jnp.int32) + offset
+    nk = kdim // bk
+    grid = (m // bm, n // bn, nk)
+    kernel = functools.partial(_lut_kernel, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((256, 256), lambda i, j, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(xi, wi, table.astype(jnp.int32))

@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for approximate integer matmul.
+
+Two reference semantics:
+
+1. ``lut_matmul`` — the *behavioral* oracle: every scalar product is an
+   exhaustive (256x256) product-table lookup, accumulation is exact.  This
+   is the TPU analogue of the paper's "DSP blocks disabled" mapping: all
+   arithmetic realized in malleable logic (here: gathers), no MXU.  It is
+   bit-exact w.r.t. the numpy behavioral circuit models.
+
+2. ``rank_k_matmul`` — the *deployment* oracle: the DESIGN.md §2
+   factorization  approx(A@B) = A@B + sum_r U_r[A] @ V_r[B],  i.e. (k+1)
+   exact matmuls plus 256-entry elementwise lookups.  At full rank this
+   reconstructs the behavioral table exactly (up to f32 rounding of the
+   SVD factors); at the DSE-selected rank it matches to the truncated
+   error energy.
+
+Index convention: unsigned circuits index the table with the raw 8-bit
+value; signed circuits with value+128 (see acl.tables.AXIS_S8).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["lut_matmul", "rank_k_matmul", "to_index"]
+
+
+def to_index(x: jnp.ndarray, signed: bool) -> jnp.ndarray:
+    """Map int8/uint8-valued ints to table row/col indices."""
+    x = x.astype(jnp.int32)
+    return x + 128 if signed else x
+
+
+def lut_matmul(
+    x: jnp.ndarray,       # (m, k) int values in the 8-bit domain
+    w: jnp.ndarray,       # (k, n) int values in the 8-bit domain
+    table: jnp.ndarray,   # (256, 256) int32 product table
+    *,
+    signed: bool = False,
+) -> jnp.ndarray:
+    """Behavioral approximate matmul: out[i,j] = sum_k T[x[i,k], w[k,j]].
+
+    O(m*k*n) gathers — the bit-exact oracle, not a performance path.
+    """
+    xi = to_index(x, signed)      # (m, k)
+    wi = to_index(w, signed)      # (k, n)
+    flat = table.reshape(-1)      # (65536,)
+    idx = xi[:, :, None] * 256 + wi[None, :, :]  # (m, k, n)
+    prods = jnp.take(flat, idx, axis=0)
+    # int32 accumulation: |product| <= 65025, safe for k up to ~3.3e4.
+    return prods.sum(axis=1, dtype=jnp.int32)
+
+
+def rank_k_matmul(
+    x: jnp.ndarray,   # (m, k) int values
+    w: jnp.ndarray,   # (k, n) int values
+    u: jnp.ndarray,   # (256, r) f32 error row-factors
+    v: jnp.ndarray,   # (256, r) f32 error col-factors
+    *,
+    signed: bool = False,
+    compute_dtype=jnp.float32,
+) -> jnp.ndarray:
+    """Deployment-form approximate matmul (r+1 MXU matmuls).
+
+    out = x @ w + sum_r u_r[x] @ v_r[w], computed in `compute_dtype`.
+    """
+    xi = to_index(x, signed)
+    wi = to_index(w, signed)
+    xf = x.astype(compute_dtype)
+    wf = w.astype(compute_dtype)
+    out = xf @ wf
+    if u.shape[1]:
+        ux = jnp.take(u.astype(compute_dtype), xi, axis=0)   # (m, k, r)
+        vw = jnp.take(v.astype(compute_dtype), wi, axis=0)   # (k, n, r)
+        # sum_r (m,k)@(k,n) — batch the rank dim through one einsum
+        out = out + jnp.einsum("mkr,knr->mn", ux, vw)
+    return out

@@ -1,0 +1,8 @@
+from .kernel import flash_attention_fwd
+from .ops import attention
+from .ref import chunked_attention, mha_reference, repeat_kv
+
+__all__ = [
+    "attention", "flash_attention_fwd",
+    "chunked_attention", "mha_reference", "repeat_kv",
+]

@@ -1,0 +1,113 @@
+"""Pallas TPU flash-attention forward kernel.
+
+Grid (batch*heads, q_blocks); each program streams the KV sequence in
+(bk, d) tiles with the online-softmax recurrence, keeping the running
+(m, l, acc) state in VMEM scratch.  Causal masking prunes nothing
+structurally (the loop still visits all KV tiles — the dominant cost is
+the two MXU matmuls per tile) but masks scores positionally, so the
+kernel is exact for both causal and full attention.
+
+MXU alignment: block shapes default to (bq, d) = (128, head_dim) and
+bk = 128.  GQA is handled by the wrapper (ops.py) which maps each q-head
+to its kv-head before the pallas_call.
+
+Validated against ref.mha_reference with interpret=True on CPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_fwd"]
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                  *, nk, bq, bk, causal, scale, q_offset):
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                  # (bk, d)
+    v = v_ref[0].astype(jnp.float32)                  # (bk, d)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                  # (bq, bk)
+
+    qb = pl.program_id(1)
+    qpos = qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + q_offset
+    kpos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    if causal:
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(kb == nk - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "bq", "bk", "interpret", "q_offset")
+)
+def flash_attention_fwd(
+    q: jnp.ndarray,   # (bh, sq, d)  — batch*heads flattened, kv pre-mapped
+    k: jnp.ndarray,   # (bh, sk, d)
+    v: jnp.ndarray,   # (bh, sk, d)
+    *,
+    causal: bool = True,
+    bq: int = 128,
+    bk: int = 128,
+    q_offset: int = 0,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    assert sq % bq == 0 and sk % bk == 0, (sq, sk, bq, bk)
+    nk = sk // bk
+    scale = d ** -0.5
+    kernel = functools.partial(
+        _flash_kernel, nk=nk, bq=bq, bk=bk, causal=causal, scale=scale,
+        q_offset=q_offset,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, sq // bq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, qb, kb: (b, qb, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, qb, kb: (b, kb, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, qb, kb: (b, kb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, qb, kb: (b, qb, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,137 @@
+"""Attention references.
+
+``mha_reference`` — naive O(s^2)-memory softmax attention (the oracle).
+``chunked_attention`` — online-softmax over KV chunks via lax.scan:
+O(s*chunk) activation memory, differentiable, shardable.  This is the
+production attention used by the model stack for long sequences (the
+32k-prefill shapes would otherwise materialize multi-PB score tensors).
+
+All functions take (batch, heads, seq, head_dim) layouts and support GQA
+via ``kv_heads < heads`` (heads are grouped onto kv heads).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["mha_reference", "chunked_attention", "repeat_kv", "set_chunk_remat"]
+
+NEG_INF = -1e30
+
+# Perf toggle (§Perf hillclimb): remat the KV-chunk body so backward
+# recomputes scores per chunk instead of stashing every chunk's
+# (b, h, q, chunk) f32 score/prob residuals — the flash-attention
+# backward recompute strategy, expressed at the XLA level.
+# Default ON since the hillclimb validated it (EXPERIMENTS.md §Perf):
+# -33% peak memory, -11% step time on the gemma cell; required for the
+# qwen batch-TP variant to approach the HBM budget.
+CHUNK_REMAT = True
+
+
+def set_chunk_remat(on: bool) -> None:
+    global CHUNK_REMAT
+    CHUNK_REMAT = bool(on)
+
+
+def repeat_kv(kv: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    """(b, kvh, s, d) -> (b, kvh*n_rep, s, d) by repetition (GQA)."""
+    if n_rep == 1:
+        return kv
+    b, h, s, d = kv.shape
+    return jnp.broadcast_to(kv[:, :, None], (b, h, n_rep, s, d)).reshape(
+        b, h * n_rep, s, d
+    )
+
+
+def mha_reference(
+    q: jnp.ndarray,           # (b, h, sq, d)
+    k: jnp.ndarray,           # (b, kvh, sk, d)
+    v: jnp.ndarray,           # (b, kvh, sk, d)
+    *,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    q_offset: int = 0,        # absolute position of q[0] (decode steps)
+) -> jnp.ndarray:
+    b, h, sq, d = q.shape
+    kvh = k.shape[1]
+    k = repeat_kv(k, h // kvh)
+    v = repeat_kv(v, h // kvh)
+    scale = scale if scale is not None else d ** -0.5
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q * scale, k).astype(jnp.float32)
+    if causal:
+        qpos = jnp.arange(sq) + q_offset
+        kpos = jnp.arange(k.shape[2])
+        mask = kpos[None, :] <= qpos[:, None]
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs.astype(v.dtype), v)
+
+
+def chunked_attention(
+    q: jnp.ndarray,           # (b, h, sq, d)
+    k: jnp.ndarray,           # (b, kvh, sk, d)
+    v: jnp.ndarray,           # (b, kvh, sk, d)
+    *,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    chunk: int = 1024,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """Flash-style online softmax, scanning KV in chunks.
+
+    Memory O(b*h*sq*(d + chunk)) instead of O(b*h*sq*sk)."""
+    b, h, sq, d = q.shape
+    kvh = k.shape[1]
+    n_rep = h // kvh
+    sk = k.shape[2]
+    if sk % chunk != 0:
+        pad = chunk - sk % chunk
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        kvalid = sk
+        sk = sk + pad
+    else:
+        kvalid = sk
+    n_chunks = sk // chunk
+    scale = scale if scale is not None else d ** -0.5
+    qs = (q * scale).astype(jnp.float32)
+    qpos = jnp.arange(sq) + q_offset
+
+    kc = k.reshape(b, kvh, n_chunks, chunk, d).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, kvh, n_chunks, chunk, d).transpose(2, 0, 1, 3, 4)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        kb, vb, c_idx = inputs
+        kb = repeat_kv(kb, n_rep).astype(jnp.float32)
+        vb = repeat_kv(vb, n_rep).astype(jnp.float32)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qs, kb)
+        kpos = c_idx * chunk + jnp.arange(chunk)
+        valid = kpos < kvalid
+        if causal:
+            valid = valid[None, :] & (kpos[None, :] <= qpos[:, None])
+            s = jnp.where(valid[None, None], s, NEG_INF)
+        else:
+            s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, vb)
+        return (m_new, l_new, acc_new), None
+
+    if CHUNK_REMAT:
+        body = jax.checkpoint(body)
+
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (kc, vc, jnp.arange(n_chunks))
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)

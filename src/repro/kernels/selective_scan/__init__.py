@@ -1,0 +1,6 @@
+from .kernel import selective_scan_pallas
+from .ops import selective_scan
+from .ref import selective_scan_reference
+
+__all__ = ["selective_scan", "selective_scan_pallas",
+           "selective_scan_reference"]

@@ -1,0 +1,52 @@
+"""Pure-jnp oracle for the Mamba-1 selective scan.
+
+    h_t = exp(dt_t * A) * h_{t-1} + (dt_t * x_t) * B_t
+    y_t = <h_t, C_t> + D * x_t        (the D term is applied by the caller)
+
+Shapes: x/dt (b, s, di), A (di, n), B/C (b, s, n), h (b, di, n).
+Sequential-scan reference — the ground truth for both the chunked
+associative implementation (models/ssm.py) and the Pallas kernel.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["selective_scan_reference"]
+
+
+def selective_scan_reference(
+    x: jnp.ndarray,
+    dt: jnp.ndarray,
+    A: jnp.ndarray,
+    B: jnp.ndarray,
+    C: jnp.ndarray,
+    h0: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y (b, s, di), h_final (b, di, n)); f32 math."""
+    b, s, di = x.shape
+    n = A.shape[1]
+    x = x.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    A = A.astype(jnp.float32)
+    B = B.astype(jnp.float32)
+    C = C.astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((b, di, n), jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp                       # (b, di), (b, di), (b, n)
+        a = jnp.exp(dtt[..., None] * A[None])       # (b, di, n)
+        h = a * h + (dtt * xt)[..., None] * Bt[:, None, :]
+        y = jnp.einsum("bin,bn->bi", h, Ct)
+        return h, y
+
+    hT, ys = jax.lax.scan(
+        step, h0,
+        (x.transpose(1, 0, 2), dt.transpose(1, 0, 2),
+         B.transpose(1, 0, 2), C.transpose(1, 0, 2)),
+    )
+    return ys.transpose(1, 0, 2), hT

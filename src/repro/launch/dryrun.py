@@ -1,0 +1,265 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture x input shape) cell and both production meshes
+(single-pod 16x16, multi-pod 2x16x16), lower + compile the appropriate
+step function against abstract inputs (ShapeDtypeStructs, no allocation),
+then record:
+
+  * memory_analysis()  — proves the cell fits 16 GB/chip,
+  * cost_analysis()    — per-device HLO FLOPs / bytes,
+  * collective bytes   — parsed from the partitioned HLO text,
+  * the three roofline terms (core/hw.py).
+
+Results are cached as JSON under experiments/dryrun/ — the §Roofline
+benchmark and EXPERIMENTS.md tables read from there.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                  # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch jamba --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --multi-pod ...
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from ..core import hlo_analysis, hw
+from ..configs import ARCHS, get_config
+from ..models import ApproxPolicy
+from ..optim.adamw import AdamW
+from ..train.serve import make_decode_step, make_prefill_step
+from ..train.step import init_state, make_train_step
+from .mesh import make_production_mesh
+from .shapes import SHAPES, input_specs, n_microbatches, runnable
+
+DEFAULT_OUT = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun"
+)
+
+
+def _abstract_opt_state(cfg, params_abs, mesh, rules):
+    """Abstract AdamW state matching init_state(): m, v in moment dtype."""
+
+    def mom(p):
+        return jax.ShapeDtypeStruct(p.shape, cfg.moment_dtype, sharding=p.sharding)
+
+    return {
+        "m": jax.tree.map(mom, params_abs),
+        "v": jax.tree.map(mom, params_abs),
+        "step": jax.ShapeDtypeStruct((), np.int32),
+    }
+
+
+def lower_cell(
+    arch: str,
+    shape: str,
+    *,
+    multi_pod: bool = False,
+    policy: Optional[ApproxPolicy] = None,
+    rules_override: Optional[dict] = None,
+    n_micro: Optional[int] = None,
+    acc_dtype: Optional[str] = None,
+    verbose: bool = True,
+) -> Dict[str, Any]:
+    """Lower + compile one cell; returns the §Dry-run/§Roofline record."""
+    cfg = get_config(arch)
+    ok, reason = runnable(cfg, shape)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "approx_policy": sorted(policy.assignments) if policy else None,
+    }
+    if not ok:
+        rec["status"] = reason
+        return rec
+
+    from ..dist import sharding as shd
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    spec = input_specs(cfg, shape, mesh, rules_override=rules_override)
+    rules = spec["rules"]
+    rules_ctx = shd.rule_overrides(rules)  # reach the model's constrain()s
+
+    def sh(tree):
+        # pin output shardings to the input shardings: without this XLA
+        # leaves e.g. FSDP gradients REPLICATED on output (47 GB/device
+        # observed on jamba) instead of reduce-scattering them
+        return jax.tree.map(lambda s: s.sharding, tree)
+
+    t0 = time.perf_counter()
+    with jax.set_mesh(mesh), rules_ctx:
+        if spec["kind"] == "train":
+            nm = n_micro or n_microbatches(cfg, mesh)
+            rec["n_micro"] = nm
+            opt = AdamW(moment_dtype=cfg.moment_dtype)
+            step = make_train_step(cfg, opt, n_micro=nm, policy=policy,
+                                   acc_dtype=acc_dtype)
+            state_abs = {
+                "params": spec["params"],
+                "opt": _abstract_opt_state(cfg, spec["params"], mesh, rules),
+            }
+            lowered = jax.jit(
+                step, donate_argnums=(0,),
+                out_shardings=(sh(state_abs), None),
+            ).lower(state_abs, spec["batch"])
+        elif spec["kind"] == "prefill":
+            step = make_prefill_step(cfg, policy=policy)
+            out_sh = (
+                (None, sh(spec["caches"]), None)
+                if cfg.is_encoder_decoder
+                else (None, sh(spec["caches"]))
+            )
+            lowered = jax.jit(
+                step, donate_argnums=(2,), out_shardings=out_sh,
+            ).lower(spec["params"], spec["batch"], spec["caches"])
+        else:  # decode
+            step = make_decode_step(cfg, policy=policy)
+            args = [spec["params"], spec["caches"], spec["tokens"], spec["pos"]]
+            kw = {}
+            if "enc_out" in spec:
+                kw["enc_out"] = spec["enc_out"]
+            lowered = jax.jit(
+                step, donate_argnums=(1,),
+                out_shardings=(None, None, sh(spec["caches"])),
+            ).lower(*args, **kw)
+        t_lower = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0
+
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    # Trip-count-aware analysis of the partitioned HLO (XLA's aggregate
+    # cost_analysis counts while bodies once — useless for scanned stacks).
+    hc = hlo_analysis.analyze_hlo(hlo)
+
+    flops = hc.flops
+    byts = hc.hbm_bytes
+    rt = hw.roofline(flops, byts, hc.collective_bytes)
+
+    cell = SHAPES[shape]
+    tokens = cell.global_batch * (
+        cell.seq_len if cell.kind in ("train", "prefill") else 1
+    )
+    n_active = cfg.active_param_count()
+    model_flops = (6 if cell.kind == "train" else 2) * n_active * tokens
+    rec.update(
+        status="ok",
+        n_devices=n_dev,
+        t_lower_s=round(t_lower, 2),
+        t_compile_s=round(t_compile, 2),
+        memory={
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_cpu_bytes": mem.argument_size_in_bytes
+            + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes
+            - mem.alias_size_in_bytes,
+            # TPU-corrected temp: the CPU backend upcasts every bf16 dot
+            # operand/result to f32 (it has no bf16 ALU), so big temps are
+            # f32 shadows of bf16 tensors that a TPU would never allocate;
+            # argument/output state sizes are exact.  Documented in
+            # EXPERIMENTS.md §Dry-run.
+            "peak_tpu_estimate_bytes": mem.argument_size_in_bytes
+            + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes / 2
+            - mem.alias_size_in_bytes,
+        },
+        fits_hbm=bool(
+            mem.argument_size_in_bytes + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes / 2 - mem.alias_size_in_bytes
+            < hw.V5E.hbm_bytes
+        ),
+        flops_per_device=flops,
+        hbm_bytes_per_device=byts,
+        collective_bytes_per_device={
+            **hc.collective_detail, "total": hc.collective_bytes
+        },
+        xla_reported={  # XLA aggregate (loop bodies counted once) — ref only
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        },
+        roofline=rt.as_dict(),
+        model_flops_total=model_flops,
+        model_flops_per_device=model_flops / n_dev,
+        useful_flops_ratio=(model_flops / n_dev) / flops if flops else 0.0,
+    )
+    if verbose:
+        mb = rec["memory"]["peak_tpu_estimate_bytes"] / 2**30
+        mb_cpu = rec["memory"]["peak_cpu_bytes"] / 2**30
+        print(
+            f"[dryrun] {arch:24s} {shape:12s} {rec['mesh']:8s} "
+            f"compile={t_compile:6.1f}s peak={mb:6.2f}GiB(tpu-est"
+            f"|cpu {mb_cpu:.1f}) "
+            f"bottleneck={rt.bottleneck:10s} t_step={rt.t_step*1e3:9.3f}ms "
+            f"useful={rec['useful_flops_ratio']:.2f}",
+            flush=True,
+        )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id or prefix (default: all)")
+    ap.add_argument("--shape", default=None, choices=[None, *SHAPES])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--approx", default=None,
+                    help="circuit name to apply to ffn projections "
+                         "(paper-technique cell), e.g. mul8s_trunc2")
+    args = ap.parse_args()
+
+    archs = ARCHS if args.arch is None else [
+        a for a in ARCHS if a.startswith(args.arch)
+    ]
+    shapes = list(SHAPES) if args.shape is None else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    policy = None
+    if args.approx:
+        policy = ApproxPolicy({
+            "ffn_in": (args.approx, None),
+            "ffn_out": (args.approx, None),
+        })
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'mp' if mp else 'sp'}"
+                if policy:
+                    tag += f"__approx_{args.approx}"
+                path = os.path.join(args.out, tag + ".json")
+                try:
+                    rec = lower_cell(arch, shape, multi_pod=mp, policy=policy)
+                except Exception as e:  # noqa: BLE001
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "status": f"FAIL: {e}"}
+                    failures.append(tag)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+    if failures:
+        print(f"\n{len(failures)} FAILURES: {failures}")
+        raise SystemExit(1)
+    print("\nall requested cells lowered + compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""DSE-on-LM driver: run the paper's surrogate-guided NSGA-II exploration
+over the approximate-projection space of an assigned architecture.
+
+    PYTHONPATH=src python -m repro.launch.dse_lm --arch granite-8b \
+        --n-train 48 --generations 12 --pop 32
+
+Prints the validation PCC of the two surrogates (paper Fig. 6 analogue),
+the discovered Pareto front (QoR vs energy), and per-stage timings
+(paper Fig. 5 analogue).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from ..accel.lm import LMAccelerator
+from ..configs import get_config
+from ..core.acl.library import default_library
+from ..core.dse import DSEConfig, run_dse
+from ..core.nsga2 import NSGA2Config
+
+__all__ = ["main"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-8b")
+    ap.add_argument("--n-train", type=int, default=48)
+    ap.add_argument("--generations", type=int, default=12)
+    ap.add_argument("--pop", type=int, default=32)
+    ap.add_argument("--parents", type=int, default=12)
+    ap.add_argument("--pipeline", default="D", choices=list("BCDEF"))
+    ap.add_argument("--rank-genes", action="store_true",
+                    help="beyond-paper: correction rank as a DSE axis")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    accel = LMAccelerator(get_config(args.arch), seed=args.seed)
+    lib = default_library()
+    cfg = DSEConfig(
+        pipeline=args.pipeline,
+        n_train=args.n_train,
+        n_qor_samples=2,
+        rank_genes=args.rank_genes,
+        nsga=NSGA2Config(
+            pop_size=args.pop, n_parents=args.parents,
+            n_generations=args.generations, seed=args.seed,
+        ),
+        seed=args.seed,
+    )
+    res = run_dse(accel, lib, cfg, verbose=True)
+
+    print(f"\n[dse-lm] {accel.name}")
+    print(f"  surrogate validation PCC: "
+          + ", ".join(f"{k}={v:.3f}" for k, v in res.val_pcc.items()))
+    print(f"  timings: " + ", ".join(
+        f"{k}={v:.1f}s" for k, v in res.timings.items()))
+    print(f"  surrogate evaluations: {res.search.n_evaluated} "
+          f"(vs {res.config.n_train + len(res.search.genomes)} synth calls)")
+    front = res.front_objectives
+    order = np.argsort(front[:, 0])
+    print(f"  Pareto front ({len(front)} designs)  [PSNR dB, energy J]:")
+    for i in order[:12]:
+        g = res.front_genomes[i]
+        circuits, _ = accel.decode(g, lib, rank_genes=args.rank_genes)
+        names = {s.name: c.name for s, c in zip(accel.slots, circuits)
+                 if not c.is_exact}
+        print(f"    psnr={-front[i,0]:7.2f}  energy={front[i,1]:.3e}  {names}")
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({
+                "arch": args.arch,
+                "val_pcc": res.val_pcc,
+                "timings": res.timings,
+                "front": front.tolist(),
+                "front_genomes": res.front_genomes.tolist(),
+            }, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,257 @@
+import os
+
+os.environ.setdefault(
+    "XLA_FLAGS", "--xla_force_host_platform_device_count=512"
+)
+
+"""§Perf hillclimb driver: run a named experiment (a cell + a change),
+print the before/after roofline terms, and append a JSON record to
+experiments/perf_log.json.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb --cell gemma_batch_tp
+    PYTHONPATH=src python -m repro.launch.hillclimb --list
+"""
+
+import argparse
+import json
+from typing import Callable, Dict
+
+from .dryrun import lower_cell
+
+PERF_LOG = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "experiments",
+    "perf_log.json",
+)
+
+
+def _with_chunk_remat(fn: Callable) -> Callable:
+    def wrapped(**kw):
+        from ..kernels.flash_attention.ref import set_chunk_remat
+
+        set_chunk_remat(True)
+        try:
+            return fn(**kw)
+        finally:
+            set_chunk_remat(False)
+
+    return wrapped
+
+
+# name -> (hypothesis, callable -> record)
+EXPERIMENTS: Dict[str, tuple] = {
+    # ---- cell A: gemma-2b train (worst useful-FLOPs ratio) ----------------
+    "gemma_base": (
+        "baseline",
+        lambda: lower_cell("gemma-2b", "train_4k"),
+    ),
+    "gemma_batch_tp": (
+        "gemma has 8 heads < 16-way model axis, so attention replicates "
+        "across TP: sharding batch over (data, model) should divide "
+        "attention flops/device by ~16 at the cost of MLP-weight regathers",
+        lambda: lower_cell("gemma-2b", "train_4k",
+                           rules_override={"batch": ("pod", "data", "model")},
+                           n_micro=1),
+    ),
+    "gemma_chunk_remat": (
+        "attention-chunk residuals dominate HBM traffic; flash-style "
+        "per-chunk recompute should cut the memory term",
+        _with_chunk_remat(lambda: lower_cell("gemma-2b", "train_4k")),
+    ),
+    "gemma_both": (
+        "compose the two wins",
+        _with_chunk_remat(
+            lambda: lower_cell("gemma-2b", "train_4k",
+                               rules_override={"batch": ("pod", "data",
+                                                         "model")},
+                               n_micro=1)),
+    ),
+    # ---- cell B: jamba train multi-pod (memory-bound, tightest fit) ------
+    "jamba_base": (
+        "baseline",
+        lambda: lower_cell("jamba-1.5-large-398b", "train_4k",
+                           multi_pod=True),
+    ),
+    "jamba_micro4": (
+        "per-microbatch FSDP weight regathers dominate HBM traffic at 398B "
+        "(~100 GB/micro); halving the microbatch count halves weight "
+        "traffic at 2x activation cost (activations are small at 1 row)",
+        lambda: lower_cell("jamba-1.5-large-398b", "train_4k",
+                           multi_pod=True, n_micro=4),
+    ),
+    "jamba_micro2": (
+        "further: quarter the weight regathers",
+        lambda: lower_cell("jamba-1.5-large-398b", "train_4k",
+                           multi_pod=True, n_micro=2),
+    ),
+    "jamba_chunk_remat_micro4": (
+        "compose with attention/ssm chunk remat",
+        _with_chunk_remat(
+            lambda: lower_cell("jamba-1.5-large-398b", "train_4k",
+                               multi_pod=True, n_micro=4)),
+    ),
+    # ---- cell B2: qwen2-vl train (most collective-bound) ------------------
+    "qwen_base": (
+        "baseline (n_micro=16)",
+        lambda: lower_cell("qwen2-vl-72b", "train_4k"),
+    ),
+    "qwen_micro4": (
+        "per-micro collectives dominate (3.3 TB all-reduce + 0.7 TB weight "
+        "all-gather/device-step): every microbatch re-gathers FSDP weights "
+        "and reduce-scatters every layer gradient; n_micro 16->4 should "
+        "cut the collective term ~4x (activation memory grows 4x but "
+        "starts at ~1 row/device)",
+        lambda: lower_cell("qwen2-vl-72b", "train_4k", n_micro=4),
+    ),
+    "qwen_micro4_bf16acc": (
+        "compose: bf16 gradient accumulators halve the grad reduce bytes",
+        lambda: lower_cell("qwen2-vl-72b", "train_4k", n_micro=4,
+                           acc_dtype="bfloat16"),
+    ),
+    # ---- cell D: granite-moe prefill (worst useful ratio 0.01) ------------
+    "granitemoe_prefill_base_nogroup": (
+        "baseline: single routing group; GShard dispatch one-hots are "
+        "(b, 32768, 48, cap~6827) -> ~57 TB/device HBM traffic",
+        lambda: _with_moe_group(0, lambda: lower_cell(
+            "granite-moe-3b-a800m", "prefill_32k")),
+    ),
+    "granitemoe_prefill_grouped": (
+        "sequence grouping (4096-token routing groups) bounds capacity per "
+        "group: dispatch bytes drop ~8x -> memory term should drop ~5-8x",
+        lambda: _with_moe_group(4096, lambda: lower_cell(
+            "granite-moe-3b-a800m", "prefill_32k")),
+    ),
+    # ---- cell C: the paper's technique on an LM (approx policy) ----------
+    "granite_base": (
+        "baseline (exact bf16)",
+        lambda: lower_cell("granite-8b", "train_4k"),
+    ),
+    "granite_trunc4": (
+        "native int4 truncation on FFN projections: FLOPs unchanged in HLO "
+        "but the dtype-adjusted compute term drops 4x on the FFN share "
+        "(~2/3 of block flops)",
+        lambda: _approx_cell("granite-8b", "train_4k", "mul8s_trunc4"),
+    ),
+    "granite_drum4": (
+        "rank-2 DRUM correction: HLO flops on FFN grow ~(0.5+2)/1 -> the "
+        "compute term should grow ~1.7x vs baseline on the FFN share",
+        lambda: _approx_cell("granite-8b", "train_4k", "mul8s_drum4"),
+    ),
+}
+
+
+EXPERIMENTS.update({
+    # ---- iteration 2 --------------------------------------------------
+    "qwen_batch_tp": (
+        "qwen's 3 TB all-reduce is TP partial-sum reduction of activations "
+        "(invariant to n_micro).  Shard batch over (data, model) too: "
+        "activations stop needing TP all-reduces; weights stay "
+        "(data, model)-sharded and get per-layer all-gathers instead "
+        "(72B*2/16 = 9 GB/pass << 3 TB)",
+        lambda: lower_cell("qwen2-vl-72b", "train_4k",
+                           rules_override={"batch": ("pod", "data",
+                                                     "model")},
+                           n_micro=1),
+    ),
+    "granitemoe_prefill_seqshard": (
+        "granite-moe's 24 heads cannot shard on the 16-way model axis -> "
+        "attention replicates; with heads fallen back, sharding the QUERY "
+        "seq dim on model (context parallelism) divides the 40 TB of "
+        "chunk-attention traffic by 16",
+        lambda: _with_moe_group(4096, lambda: lower_cell(
+            "granite-moe-3b-a800m", "prefill_32k",
+            rules_override={"seq": "model"})),
+    ),
+    "gemma_prefill_seqshard": (
+        "same context-parallel trick for gemma prefill (useful=0.06)",
+        lambda: lower_cell("gemma-2b", "prefill_32k",
+                           rules_override={"seq": "model"}),
+    ),
+    "jamba_ssm_bf16": (
+        "jamba's memory term is dominated by the (b,L,16384,16) f32 "
+        "selective-scan streams (~6 MB/token/layer, invariant to "
+        "n_micro — the refuted micro hypothesis); bf16 streams halve it",
+        lambda: _with_scan_dtype("bfloat16", lambda: lower_cell(
+            "jamba-1.5-large-398b", "train_4k", multi_pod=True)),
+    ),
+    "falcon_ssm_bf16": (
+        "same for the pure-SSM trainer (falcon-mamba, t_mem 72s)",
+        lambda: _with_scan_dtype("bfloat16", lambda: lower_cell(
+            "falcon-mamba-7b", "train_4k")),
+    ),
+})
+
+
+EXPERIMENTS.update({
+    "qwen_batch_tp_chunk_remat": (
+        "compose: batch-TP killed the 3 TB activation all-reduce (81->36s) "
+        "but n_micro=1 activations blew HBM (22 GiB); flash-style chunk "
+        "remat should pull the attention residuals back under 16 GiB",
+        _with_chunk_remat(lambda: lower_cell(
+            "qwen2-vl-72b", "train_4k",
+            rules_override={"batch": ("pod", "data", "model")},
+            n_micro=1)),
+    ),
+})
+
+
+def _with_scan_dtype(dt, fn):
+    from ..models import ssm as _ssm
+
+    prev = _ssm.SCAN_DTYPE
+    _ssm.set_scan_dtype(dt)
+    try:
+        return fn()
+    finally:
+        _ssm.set_scan_dtype(prev)
+
+
+def _with_moe_group(n, fn):
+    from ..models.moe import set_moe_group
+
+    from ..models import moe as _moe
+    prev = _moe.MOE_GROUP
+    set_moe_group(n)
+    try:
+        return fn()
+    finally:
+        set_moe_group(prev)
+
+
+def _approx_cell(arch, shape, circuit):
+    from ..models import ApproxPolicy
+
+    pol = ApproxPolicy({"ffn_in": (circuit, None),
+                        "ffn_out": (circuit, None)})
+    return lower_cell(arch, shape, policy=pol)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default=None)
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+    if args.list or args.cell is None:
+        for k, (hyp, _) in EXPERIMENTS.items():
+            print(f"{k:28s} {hyp[:90]}")
+        return
+    hyp, fn = EXPERIMENTS[args.cell]
+    print(f"[hillclimb] {args.cell}: {hyp}")
+    rec = fn()
+    rec["experiment"] = args.cell
+    rec["hypothesis"] = hyp
+    log = []
+    if os.path.exists(PERF_LOG):
+        with open(PERF_LOG) as f:
+            log = json.load(f)
+    log.append(rec)
+    os.makedirs(os.path.dirname(PERF_LOG), exist_ok=True)
+    with open(PERF_LOG, "w") as f:
+        json.dump(log, f, indent=1)
+    rt = rec.get("roofline", {})
+    print(json.dumps({k: rt.get(k) for k in
+                      ("t_compute", "t_memory", "t_collective", "t_step",
+                       "bottleneck")}, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state.  Single pod: (16, 16) = 256 v5e chips; multi
+pod: (2, 16, 16) = 512 chips, where the "pod" axis carries only data
+parallelism (gradient reduction over DCN) and "data"/"model" are the
+intra-pod FSDP/TP axes (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )

@@ -1,0 +1,9 @@
+from .approx_linear import PROJ_CLASSES, ApproxPolicy, linear
+from .config import LayerKind, ModelConfig, reduced
+from .transformer import cache_specs, decode_step, encode, forward, param_specs
+
+__all__ = [
+    "ModelConfig", "LayerKind", "reduced",
+    "ApproxPolicy", "linear", "PROJ_CLASSES",
+    "param_specs", "cache_specs", "forward", "decode_step", "encode",
+]

@@ -1,0 +1,4 @@
+from .adamw import AdamW, clip_by_global_norm
+from .compress import compressed_psum, ef_quantize
+
+__all__ = ["AdamW", "clip_by_global_norm", "ef_quantize", "compressed_psum"]

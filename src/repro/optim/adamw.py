@@ -1,0 +1,81 @@
+"""AdamW with global-norm clipping, configurable moment dtype (fp32
+default; bf16 for the 398B-class configs to fit HBM — DESIGN.md §5), and
+decoupled weight decay.  Optimizer state is a pytree sharded like the
+parameters (XLA SPMD keeps moments on the same shards)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamW", "clip_by_global_norm"]
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), gn
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    max_grad_norm: float = 1.0
+    moment_dtype: str = "float32"
+    warmup_steps: int = 100
+
+    def init(self, params) -> Dict[str, Any]:
+        zeros = lambda p: jnp.zeros(p.shape, self.moment_dtype)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def schedule(self, step: jnp.ndarray) -> jnp.ndarray:
+        warm = jnp.minimum(1.0, (step + 1) / max(self.warmup_steps, 1))
+        return self.lr * warm
+
+    def update(
+        self, grads, state: Dict[str, Any], params
+    ) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
+        """-> (new_params, new_state, metrics)."""
+        grads, gnorm = clip_by_global_norm(grads, self.max_grad_norm)
+        step = state["step"] + 1
+        lr = self.schedule(step)
+        b1c = 1.0 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m_new = self.b1 * m.astype(jnp.float32) + (1 - self.b1) * g32
+            v_new = self.b2 * v.astype(jnp.float32) + (1 - self.b2) * g32 * g32
+            mh = m_new / b1c
+            vh = v_new / b2c
+            delta = mh / (jnp.sqrt(vh) + self.eps) + self.weight_decay * (
+                p.astype(jnp.float32)
+            )
+            p_new = p.astype(jnp.float32) - lr * delta
+            return (
+                p_new.astype(p.dtype),
+                m_new.astype(self.moment_dtype),
+                v_new.astype(self.moment_dtype),
+            )
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+        return (
+            new_params,
+            {"m": new_m, "v": new_v, "step": step},
+            {"grad_norm": gnorm, "lr": lr},
+        )

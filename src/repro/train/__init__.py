@@ -1,0 +1,7 @@
+from .serve import make_decode_step, make_prefill_step
+from .step import cross_entropy, init_state, make_loss_fn, make_train_step
+
+__all__ = [
+    "cross_entropy", "make_loss_fn", "make_train_step", "init_state",
+    "make_prefill_step", "make_decode_step",
+]

@@ -1,0 +1,76 @@
+"""Serving steps: prefill (prompt -> last-token logits + filled caches)
+and decode (one token against the cache, greedy or sampled).
+
+Prefill slices the residual stream to the final position *before* the
+LM head — materializing (B, 32k, vocab) logits would be tens of GB per
+device for the large-vocab archs.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import ApproxPolicy
+from ..models.config import ModelConfig
+from ..models.transformer import (
+    _embed,
+    _logits,
+    _scan_blocks,
+    encode,
+)
+from ..models.common import make_rope
+
+__all__ = ["make_prefill_step", "make_decode_step"]
+
+
+def _inv_freq(cfg: ModelConfig):
+    return jnp.asarray(
+        make_rope(cfg.resolved_head_dim, cfg.rope_theta,
+                  fraction=0.5 if cfg.rope_style == "half" else 1.0)
+    )
+
+
+def make_prefill_step(cfg: ModelConfig, *, policy: Optional[ApproxPolicy] = None,
+                      attn_chunk: int = 1024, scan_chunk: int = 128):
+    def prefill(params, batch: Dict[str, jnp.ndarray], caches):
+        """-> (last_logits (b, 1, V), caches, enc_out|None)"""
+        parts = []
+        if batch.get("embeds") is not None:
+            parts.append(batch["embeds"].astype(jnp.bfloat16))
+        if batch.get("tokens") is not None:
+            parts.append(_embed(params, cfg, batch["tokens"]))
+        x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+        if cfg.name.startswith("gemma"):
+            x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+        enc_out = None
+        if cfg.is_encoder_decoder:
+            enc_out = encode(params, cfg, batch["enc_embeds"],
+                             policy=policy, remat=False)
+        x, caches, _ = _scan_blocks(
+            params, cfg, x, _inv_freq(cfg), policy=policy, causal=True,
+            caches=caches, pos=None, enc_out=enc_out, remat=False,
+            attn_chunk=attn_chunk, scan_chunk=scan_chunk,
+        )
+        logits = _logits(params, cfg, x[:, -1:, :])
+        if cfg.is_encoder_decoder:
+            return logits, caches, enc_out
+        return logits, caches
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, *, policy: Optional[ApproxPolicy] = None,
+                     greedy: bool = True):
+    from ..models.transformer import decode_step as _ds
+
+    def serve_step(params, caches, tokens, pos, enc_out=None):
+        """-> (next_tokens (b, 1), logits, caches)"""
+        logits, caches = _ds(params, cfg, caches, tokens, pos,
+                             policy=policy, enc_out=enc_out)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, logits, caches
+
+    return serve_step

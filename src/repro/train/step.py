@@ -1,0 +1,160 @@
+"""Training step: CE loss (+ MoE aux), microbatched gradient accumulation
+via lax.scan (shard-preserving microbatch split), AdamW update, optional
+int8 error-feedback gradient compression.
+
+The microbatch reshape keeps every device's rows local: (B, S) ->
+(B/n_micro, n_micro, S) -> transpose -> scan over the micro axis; the
+batch-sharded dim stays intact, so no cross-device data motion is
+introduced by accumulation (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import constrain
+from ..models import ApproxPolicy, forward
+from ..models.config import ModelConfig
+from ..optim.adamw import AdamW
+from ..optim.compress import ef_quantize
+
+__all__ = ["cross_entropy", "make_loss_fn", "make_train_step", "init_state"]
+
+AUX_COEF = 0.01
+
+
+def cross_entropy(
+    logits: jnp.ndarray,      # (b, s, padded_vocab)
+    labels: jnp.ndarray,      # (b, s)
+    vocab_size: int,
+) -> jnp.ndarray:
+    logits = logits.astype(jnp.float32)
+    if logits.shape[-1] > vocab_size:
+        pad = jnp.arange(logits.shape[-1]) >= vocab_size
+        logits = jnp.where(pad[None, None], -1e30, logits)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def make_loss_fn(cfg: ModelConfig, policy: Optional[ApproxPolicy] = None,
+                 *, attn_chunk: int = 1024, scan_chunk: int = 128):
+    def loss_fn(params, batch: Dict[str, jnp.ndarray]):
+        logits, _, aux = forward(
+            params, cfg,
+            batch.get("tokens"),
+            embeds=batch.get("embeds"),
+            enc_embeds=batch.get("enc_embeds"),
+            policy=policy, remat=True,
+            attn_chunk=attn_chunk, scan_chunk=scan_chunk,
+        )
+        labels = batch["labels"]
+        if logits.shape[1] != labels.shape[1]:
+            # frontend prefix (vlm): loss only over the text positions
+            logits = logits[:, -labels.shape[1]:]
+        ce = cross_entropy(logits, labels, cfg.vocab_size)
+        return ce + AUX_COEF * aux, {"ce": ce, "aux": aux}
+
+    return loss_fn
+
+
+def _split_micro(x: jnp.ndarray, n_micro: int) -> jnp.ndarray:
+    """(B, ...) -> (n_micro, B/n_micro, ...), keeping the batch shards
+    intact (see module docstring)."""
+    b = x.shape[0]
+    assert b % n_micro == 0, (b, n_micro)
+    x = x.reshape(b // n_micro, n_micro, *x.shape[1:])
+    x = jnp.moveaxis(x, 1, 0)
+    return constrain(x, (None, "batch") + (None,) * (x.ndim - 2))
+
+
+def init_state(params, opt: AdamW, *, compress: bool = False) -> Dict[str, Any]:
+    state = {"params": params, "opt": opt.init(params)}
+    if compress:
+        state["ef_err"] = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+    return state
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt: AdamW,
+    *,
+    n_micro: int = 1,
+    policy: Optional[ApproxPolicy] = None,
+    compress: bool = False,
+    attn_chunk: int = 1024,
+    scan_chunk: int = 128,
+    acc_dtype: Optional[str] = None,   # gradient-accumulator dtype override
+):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+    loss_fn = make_loss_fn(cfg, policy, attn_chunk=attn_chunk,
+                           scan_chunk=scan_chunk)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    # logical-axis shardings of every parameter (same declaration the
+    # params were built from): gradients and their accumulators are
+    # constrained to these — otherwise XLA keeps FSDP gradients
+    # REPLICATED through the accumulation scan (tens of GB at 398B scale)
+    from ..models.transformer import param_specs as _pspecs
+    specs = _pspecs(cfg)
+
+    def _constrain_like(tree):
+        return jax.tree.map(
+            lambda t, s: constrain(t, s.logical), tree, specs
+        )
+
+    def train_step(state: Dict[str, Any], batch: Dict[str, jnp.ndarray]):
+        params = state["params"]
+        if n_micro == 1:
+            (loss, parts), grads = grad_fn(params, batch)
+            grads = _constrain_like(grads)
+        else:
+            micro = {k: _split_micro(v, n_micro) for k, v in batch.items()}
+            # accumulate in the master-weight dtype: f32 normally, bf16
+            # for the bf16-master configs (jamba) where an f32 shadow
+            # tree would blow the per-chip HBM budget
+            if acc_dtype is not None:
+                acc_dt = jnp.dtype(acc_dtype)
+            else:
+                acc_dt = (jnp.float32 if cfg.param_dtype == "float32"
+                          else jnp.bfloat16)
+            zeros = jax.tree.map(
+                lambda s: constrain(jnp.zeros(s.shape, acc_dt), s.logical),
+                specs,
+            )
+
+            def body(acc, mb):
+                g_acc, loss_acc, ce_acc = acc
+                (loss, parts), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype),
+                                     g_acc, _constrain_like(g))
+                g_acc = _constrain_like(g_acc)
+                return (g_acc, loss_acc + loss, ce_acc + parts["ce"]), None
+
+            (grads, loss, ce), _ = jax.lax.scan(
+                body, (zeros, jnp.zeros(()), jnp.zeros(())), micro
+            )
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            loss, parts = loss / n_micro, {"ce": ce / n_micro, "aux": 0.0}
+
+        if compress:
+            pairs = jax.tree.map(ef_quantize, grads, state["ef_err"])
+            grads = jax.tree.map(lambda t: t[0], pairs,
+                                 is_leaf=lambda t: isinstance(t, tuple))
+            new_err = jax.tree.map(lambda t: t[1], pairs,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+
+        new_params, new_opt, opt_metrics = opt.update(grads, state["opt"], params)
+        new_state = {"params": new_params, "opt": new_opt}
+        if compress:
+            new_state["ef_err"] = new_err
+        metrics = {"loss": loss, **{k: v for k, v in parts.items()}, **opt_metrics}
+        return new_state, metrics
+
+    return train_step

@@ -1,0 +1,15 @@
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benchmarks must
+# see the real single CPU device; only launch/dryrun.py (and the explicit
+# subprocess tests) force 512/8 host devices.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

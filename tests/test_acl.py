@@ -1,0 +1,131 @@
+"""Circuit-library unit tests: behavioral model properties, exhaustive
+tables, error statistics, SVD factorization."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.acl import adders, multipliers, tables
+from repro.core.acl.library import default_library
+
+LIB = default_library()
+
+
+def test_library_contents():
+    assert len(LIB.kind("mul8u")) >= 20
+    assert len(LIB.kind("mul8s")) >= 15
+    assert len(LIB.kind("add16")) >= 12
+    # exactly one exact circuit per kind
+    for kind in ("mul8u", "mul8s", "add16"):
+        assert sum(c.is_exact for c in LIB.kind(kind)) == 1
+
+
+def test_exact_circuits_are_exact():
+    a, b = np.meshgrid(np.arange(256), np.arange(256), indexing="ij")
+    assert np.array_equal(multipliers.mul8_exact(a, b), a * b)
+    s = np.arange(-128, 128)
+    sa, sb = np.meshgrid(s, s, indexing="ij")
+    sf = multipliers.signed_wrap(multipliers.mul8_exact)
+    assert np.array_equal(sf(sa, sb), sa * sb)
+    ra = np.arange(0, 1 << 16, 257)
+    assert np.array_equal(adders.add_exact(ra, ra[::-1]), ra + ra[::-1])
+
+
+@pytest.mark.parametrize("k", [1, 3, 5])
+def test_trunc_mean_error_closed_form(k):
+    """Operand truncation has a known mean error: E[a*b - (a>>k<<k)(b>>k<<k)]
+    = E[a]*E[b] - E[a_t]*E[b_t] over uniform operands."""
+    c = LIB[f"mul8u_trunc{k}"]
+    ax = np.arange(256)
+    trunc = (ax >> k) << k
+    expected = (ax.mean() ** 2) - (trunc.mean() ** 2)
+    assert abs(-c.stats.me - expected) < 1e-6
+
+
+def test_mitchell_error_bound():
+    """Mitchell's multiplier under-approximates by at most ~11.1%."""
+    c = LIB["mul8u_mitchell"]
+    etab = c.etab
+    ax = np.arange(256)
+    exact = np.multiply.outer(ax, ax)
+    rel = etab / np.maximum(exact, 1)
+    assert etab.max() <= 0  # never over-approximates
+    assert rel.min() > -0.12
+
+
+def test_drum_unbiased():
+    """DRUM is approximately unbiased: |mean error| is a small fraction of
+    the mean exact product (~16256 for uniform operands)."""
+    c = LIB["mul8u_drum6"]
+    mean_product = (255 / 2) ** 2
+    assert abs(c.stats.me) < 0.02 * mean_product
+
+
+@pytest.mark.parametrize("name", ["mul8u_trunc2", "mul8u_perf3", "mul8s_drum4"])
+def test_error_table_consistency(name):
+    c = LIB[name]
+    assert c.table.shape == (256, 256)
+    st_ = c.stats
+    assert st_.mse >= st_.var >= 0
+    assert st_.wce >= st_.mae >= 0
+    assert 0 <= st_.ep <= 1
+
+
+def test_svd_reconstruction_exact_at_full_rank():
+    c = LIB["mul8u_perf2"]
+    f = c.factors(256)
+    err = np.abs(f.reconstruct() - c.etab).max()
+    assert err < 1e-3 * max(np.abs(c.etab).max(), 1)
+
+
+def test_effective_rank_captures_energy():
+    for name in ("mul8u_trunc3", "mul8u_bam4", "mul8u_mitchell"):
+        c = LIB[name]
+        k = c.eff_rank
+        f = c.factors(k)
+        res = np.linalg.norm(c.etab - f.reconstruct()) ** 2
+        tot = np.linalg.norm(c.etab) ** 2
+        assert res <= 0.011 * tot, name
+        assert k <= 16, (name, k)
+
+
+def test_exact_has_rank_zero():
+    assert LIB["mul8u_exact"].eff_rank == 0
+    assert LIB["mul8s_exact"].eff_rank == 0
+
+
+@given(
+    st.integers(0, 255), st.integers(0, 255),
+    st.sampled_from(["mul8u_trunc2", "mul8u_perf4", "mul8u_bam6",
+                     "mul8u_mitchell", "mul8u_drum4", "mul8u_kulkarni"]),
+)
+@settings(max_examples=200, deadline=None)
+def test_table_matches_model(a, b, name):
+    c = LIB[name]
+    assert c.table[a, b] == int(np.asarray(c.fn(a, b)))
+
+
+@given(st.integers(-128, 127), st.integers(-128, 127))
+@settings(max_examples=100, deadline=None)
+def test_signed_table_indexing(a, b):
+    c = LIB["mul8s_trunc1"]
+    assert c.table[a + 128, b + 128] == int(np.asarray(c.fn(a, b)))
+
+
+@given(st.integers(0, (1 << 16) - 1), st.integers(0, (1 << 16) - 1),
+       st.integers(1, 8))
+@settings(max_examples=100, deadline=None)
+def test_adder_bounds(a, b, k):
+    """Approximate adders stay within 2^k of the exact sum (LOA/trunc)."""
+    exact = a + b
+    assert abs(int(np.asarray(adders.add_loa(a, b, k=k))) - exact) < (1 << (k + 1))
+    assert abs(int(np.asarray(adders.add_trunc(a, b, k=k))) - exact) < (1 << (k + 1))
+
+
+def test_speculative_adder_exact_on_short_carries():
+    # carry chains shorter than the lookahead window are exact
+    a = np.array([0x0F0F, 0x1111, 0x00FF])
+    b = np.array([0x1010, 0x2222, 0x0100])
+    out = adders.add_speculative(a, b, la=8)
+    assert np.array_equal(out, a + b)

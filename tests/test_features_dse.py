@@ -1,0 +1,100 @@
+"""Feature pipelines (A-F), surrogate training, and the end-to-end DSE —
+including the paper's qualitative claims at reduced scale."""
+
+import numpy as np
+import pytest
+
+from repro.accel import MCMAccelerator
+from repro.core.acl.library import default_library
+from repro.core.dse import DSEConfig, run_dse
+from repro.core.features import synth
+from repro.core.features.cheap import circuit_features_cheap, variant_features
+from repro.core.features.pipelines import build_extractor, evaluate_pipeline
+from repro.core.nsga2 import NSGA2Config
+from repro.core.pareto import non_dominated_mask
+from repro.core.surrogates import pcc
+
+LIB = default_library()
+
+
+@pytest.fixture(scope="module")
+def mcm():
+    return MCMAccelerator(0)
+
+
+@pytest.fixture(scope="module")
+def labeled(mcm):
+    rng = np.random.default_rng(0)
+    sizes = mcm.gene_sizes(LIB)
+    genomes = rng.integers(0, sizes[None, :], size=(60, len(sizes)))
+    labels = synth.label_variants(mcm, genomes, LIB, cache={})
+    return genomes, labels
+
+
+def test_cheap_features_shapes(mcm):
+    from repro.core.features.cheap import CHEAP_AC_DIM
+
+    for c in LIB.circuits[:5]:
+        f = circuit_features_cheap(c)
+        assert f.shape == (CHEAP_AC_DIM,) and np.isfinite(f).all()
+    rng = np.random.default_rng(1)
+    sizes = mcm.gene_sizes(LIB)
+    genomes = rng.integers(0, sizes[None, :], size=(7, len(sizes)))
+    X = variant_features(mcm, genomes, LIB)
+    assert X.shape[0] == 7 and np.isfinite(X).all()
+
+
+@pytest.mark.parametrize("pipeline", ["C", "D", "F"])
+def test_extractors_run(pipeline, mcm):
+    ext = build_extractor(pipeline, mcm, LIB)
+    rng = np.random.default_rng(2)
+    sizes = mcm.gene_sizes(LIB)
+    genomes = rng.integers(0, sizes[None, :], size=(5, len(sizes)))
+    X = ext(genomes)
+    assert X.shape[0] == 5 and np.isfinite(X).all()
+    assert ext.per_variant_time >= 0
+
+
+def test_pipeline_D_beats_F_and_is_fast(mcm, labeled):
+    """Paper Fig. 5 qualitative claims: accelerator-level features (D)
+    correlate better than AC-composition-free (F); both are orders of
+    magnitude cheaper per variant than synthesis."""
+    genomes, labels = labeled
+    tr, te = slice(0, 40), slice(40, None)
+    ltr = {k: v[tr] for k, v in labels.items()}
+    lte = {k: v[te] for k, v in labels.items()}
+    rep_d = evaluate_pipeline("D", mcm, LIB, genomes[tr], ltr, genomes[te], lte)
+    rep_f = evaluate_pipeline("F", mcm, LIB, genomes[tr], ltr, genomes[te], lte)
+    assert rep_d.pcc_hw >= rep_f.pcc_hw - 0.05
+    assert rep_d.pcc_hw > 0.6
+    synth_time = labels["synth_time"][labels["synth_time"] > 0].mean()
+    assert rep_d.per_variant_time < synth_time / 10
+
+
+def test_dse_end_to_end_beats_exact_only_energy(mcm):
+    cfg = DSEConfig(
+        n_train=30, n_qor_samples=2,
+        nsga=NSGA2Config(pop_size=16, n_parents=8, n_generations=3, seed=0),
+    )
+    res = run_dse(mcm, LIB, cfg)
+    assert res.front_mask.any()
+    assert non_dominated_mask(res.front_objectives).all()
+    assert res.val_pcc["energy"] > 0.4
+    # the front contains at least one non-exact (cheaper) design
+    assert (res.front_objectives[:, 1] <
+            res.final_labels["energy"].max() + 1e-12).any()
+    # timings recorded for every stage
+    assert set(res.timings) == {"label", "train", "explore", "final_eval"}
+
+
+def test_surrogate_evaluations_cheaper_than_synthesis(mcm):
+    """The paper's central claim: exploration touches far more variants
+    than synthesis does."""
+    cfg = DSEConfig(
+        n_train=20, n_qor_samples=2,
+        nsga=NSGA2Config(pop_size=24, n_parents=8, n_generations=4, seed=1),
+    )
+    res = run_dse(mcm, LIB, cfg)
+    n_synth = cfg.n_train + len(res.search.genomes)
+    assert res.search.n_evaluated > 0
+    assert res.timings["explore"] < res.timings["label"]

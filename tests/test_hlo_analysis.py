@@ -1,0 +1,118 @@
+"""The trip-count-aware HLO analyzer: validated against programs with
+analytically known FLOP counts (incl. the critical scan-multiplier case
+that XLA's own cost_analysis gets wrong)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hlo_analysis import analyze_hlo
+
+
+def _analyze(fn, *args):
+    compiled = jax.jit(fn).lower(*args).compile()
+    return analyze_hlo(compiled.as_text()), compiled
+
+
+def test_single_matmul_flops_exact():
+    m, k, n = 64, 128, 32
+    x = jnp.ones((m, k), jnp.float32)
+    w = jnp.ones((k, n), jnp.float32)
+    cost, _ = _analyze(lambda a, b: a @ b, x, w)
+    assert cost.flops == pytest.approx(2 * m * k * n)
+
+
+def test_batched_matmul_flops():
+    b, m, k, n = 4, 16, 32, 8
+    x = jnp.ones((b, m, k), jnp.float32)
+    w = jnp.ones((b, k, n), jnp.float32)
+    cost, _ = _analyze(lambda a, b: jnp.einsum("bmk,bkn->bmn", a, b), x, w)
+    assert cost.flops == pytest.approx(2 * b * m * k * n)
+
+
+def test_scan_multiplies_flops_by_trip_count():
+    """THE critical property: a scanned matmul counts trips times."""
+    m = 32
+    trips = 7
+    x = jnp.ones((m, m), jnp.float32)
+    ws = jnp.ones((trips, m, m), jnp.float32)
+
+    def fn(x, ws):
+        def body(c, w):
+            return c @ w, None
+        out, _ = jax.lax.scan(body, x, ws)
+        return out
+
+    cost, compiled = _analyze(fn, x, ws)
+    expect = trips * 2 * m**3
+    assert cost.flops == pytest.approx(expect, rel=0.01)
+    # ... and XLA's own aggregate misses the multiplier
+    xla = float((compiled.cost_analysis() or {}).get("flops", 0.0))
+    assert xla < expect
+
+
+def test_nested_scan_multiplies_both_levels():
+    m, outer, inner = 16, 3, 5
+    x = jnp.ones((m, m), jnp.float32)
+    ws = jnp.ones((outer, inner, m, m), jnp.float32)
+
+    def fn(x, ws):
+        def obody(c, wgrp):
+            def ibody(ci, w):
+                return ci @ w, None
+            c2, _ = jax.lax.scan(ibody, c, wgrp)
+            return c2, None
+        out, _ = jax.lax.scan(obody, x, ws)
+        return out
+
+    cost, _ = _analyze(fn, x, ws)
+    assert cost.flops == pytest.approx(outer * inner * 2 * m**3, rel=0.01)
+
+
+def test_hbm_bytes_scale_with_tensor_size():
+    big = jnp.ones((512, 512), jnp.float32)
+    small = jnp.ones((64, 64), jnp.float32)
+    cb, _ = _analyze(lambda a: (a * 2 + 1).sum(), big)
+    cs, _ = _analyze(lambda a: (a * 2 + 1).sum(), small)
+    assert cb.hbm_bytes > cs.hbm_bytes * 20
+
+
+def test_dynamic_slice_not_charged_full_operand():
+    """A scan slicing a big stacked tensor must not count the full stack
+    every iteration."""
+    trips, m = 50, 64
+    ws = jnp.ones((trips, m, m), jnp.float32)
+    x = jnp.ones((m, m), jnp.float32)
+
+    def fn(x, ws):
+        def body(c, w):
+            return c + w, None
+        out, _ = jax.lax.scan(body, x, ws)
+        return out
+
+    cost, _ = _analyze(fn, x, ws)
+    full_stack = trips * m * m * 4
+    # per-iteration traffic ~ 3 slices of m*m*4; total ~ trips * 3 slices
+    # << trips * full_stack
+    assert cost.hbm_bytes < 0.5 * trips * full_stack
+
+
+def test_remat_increases_flops():
+    m = 64
+    x = jnp.ones((m, m), jnp.float32)
+    w = jnp.ones((m, m), jnp.float32)
+
+    def loss(w, x):
+        h = jnp.tanh(x @ w)
+        return (h @ w).sum()
+
+    def loss_remat(w, x):
+        def inner(w, x):
+            return jnp.tanh(x @ w)
+        h = jax.checkpoint(inner)(w, x)
+        return (h @ w).sum()
+
+    c_plain, _ = _analyze(jax.grad(loss), w, x)
+    c_remat, _ = _analyze(jax.grad(loss_remat), w, x)
+    assert c_remat.flops >= c_plain.flops

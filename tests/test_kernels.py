@@ -1,0 +1,179 @@
+"""Per-kernel validation: shape/dtype sweeps against the pure-jnp/numpy
+oracles (assignment requirement), Pallas interpret mode, quantization
+properties."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.acl.library import default_library
+from repro.kernels.approx_matmul import (
+    approx_matmul,
+    dequantize,
+    from_circuit,
+    grouped_matmul,
+    lut_matmul,
+    lut_matmul_pallas,
+    quantize_sym,
+    rank_k_matmul,
+    rank_k_mxu,
+)
+from repro.kernels.flash_attention import (
+    attention,
+    chunked_attention,
+    flash_attention_fwd,
+    mha_reference,
+)
+
+LIB = default_library()
+
+
+def _numpy_lut_matmul(c, x, w):
+    out = np.zeros((x.shape[0], w.shape[1]), np.int64)
+    for k in range(x.shape[1]):
+        out += np.asarray(c.fn(x[:, k : k + 1], w[k : k + 1, :]))
+    return out
+
+
+@pytest.mark.parametrize("name", ["mul8u_exact", "mul8u_trunc2", "mul8u_mitchell",
+                                  "mul8s_exact", "mul8s_drum4", "mul8s_perf3"])
+@pytest.mark.parametrize("shape", [(8, 16, 8), (32, 64, 16)])
+def test_lut_matmul_matches_behavioral(name, shape, rng):
+    c = LIB[name]
+    m, k, n = shape
+    lo, hi = (-128, 128) if c.signed else (0, 256)
+    x = rng.integers(lo, hi, (m, k))
+    w = rng.integers(lo, hi, (k, n))
+    got = np.asarray(lut_matmul(jnp.asarray(x), jnp.asarray(w),
+                                jnp.asarray(c.table), signed=c.signed))
+    assert np.array_equal(got, _numpy_lut_matmul(c, x, w))
+
+
+@pytest.mark.parametrize("name", ["mul8u_trunc3", "mul8s_trunc2"])
+@pytest.mark.parametrize("bm,bn,bk", [(32, 32, 32), (64, 64, 64)])
+def test_pallas_lut_kernel_interpret(name, bm, bn, bk, rng):
+    c = LIB[name]
+    m, k, n = bm * 2, bk * 2, bn
+    lo, hi = (-128, 128) if c.signed else (0, 256)
+    x = rng.integers(lo, hi, (m, k))
+    w = rng.integers(lo, hi, (k, n))
+    want = _numpy_lut_matmul(c, x, w)
+    got = np.asarray(lut_matmul_pallas(
+        jnp.asarray(x), jnp.asarray(w), jnp.asarray(c.table.astype(np.int32)),
+        signed=c.signed, bm=bm, bn=bn, bk=bk, interpret=True,
+    ))
+    assert np.array_equal(got.astype(np.int64), want)
+
+
+@pytest.mark.parametrize("name", ["mul8u_trunc2", "mul8u_bam4", "mul8s_mitchell"])
+def test_rank_full_reconstructs_behavioral(name, rng):
+    c = LIB[name]
+    lo, hi = (-128, 128) if c.signed else (0, 256)
+    x = rng.integers(lo, hi, (16, 32))
+    w = rng.integers(lo, hi, (32, 8))
+    spec = from_circuit(c, rank=256)
+    got = np.asarray(approx_matmul(jnp.asarray(x), jnp.asarray(w), spec))
+    want = _numpy_lut_matmul(c, x, w).astype(np.float64)
+    scale = max(np.abs(want).max(), 1.0)
+    assert np.abs(got - want).max() / scale < 1e-4
+
+
+@pytest.mark.parametrize("name", ["mul8u_trunc2", "mul8u_drum4", "mul8u_perf2"])
+def test_eff_rank_error_within_energy_bound(name, rng):
+    c = LIB[name]
+    x = rng.integers(0, 256, (64, 64))
+    w = rng.integers(0, 256, (64, 64))
+    spec = from_circuit(c)  # 99%-energy rank
+    got = np.asarray(approx_matmul(jnp.asarray(x), jnp.asarray(w), spec))
+    want = _numpy_lut_matmul(c, x, w).astype(np.float64)
+    exact = (x.astype(np.float64) @ w)
+    # residual of the rank-k correction vs the behavioral error magnitude
+    res = np.abs(got - want).mean()
+    err_mag = np.abs(want - exact).mean() + 1.0
+    assert res <= 0.35 * err_mag, (name, res, err_mag)
+
+
+def test_rank_k_pallas_matches_ref(rng):
+    c = LIB["mul8u_perf3"]
+    spec = from_circuit(c, rank=4)
+    x = rng.integers(0, 256, (128, 128))
+    w = rng.integers(0, 256, (128, 128))
+    ref = np.asarray(rank_k_matmul(jnp.asarray(x), jnp.asarray(w),
+                                   jnp.asarray(spec.u), jnp.asarray(spec.v)))
+    got = np.asarray(rank_k_mxu(jnp.asarray(x), jnp.asarray(w),
+                                jnp.asarray(spec.u), jnp.asarray(spec.v),
+                                interpret=True))
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=0.5)
+
+
+def test_grouped_matmul_mixes_circuits(rng):
+    c1, c2 = LIB["mul8u_exact"], LIB["mul8u_trunc3"]
+    x = rng.integers(0, 256, (8, 6))
+    w = rng.integers(0, 256, (6, 4))
+    out = np.asarray(grouped_matmul(
+        jnp.asarray(x), jnp.asarray(w),
+        [from_circuit(c1), from_circuit(c2)],
+        [(0, 3), (3, 6)],
+    ))
+    want = (x[:, :3].astype(np.float64) @ w[:3]) + _numpy_lut_matmul(
+        c2, x[:, 3:], w[3:]
+    )
+    scale = np.abs(want).max()
+    assert np.abs(out - want).max() / scale < 0.02
+
+
+@given(st.integers(1, 6))
+@settings(max_examples=20, deadline=None)
+def test_quantize_roundtrip_error_bound(seed):
+    rng = np.random.default_rng(seed)
+    t = jnp.asarray(rng.standard_normal((32, 16)) * rng.uniform(0.1, 10))
+    q, s = quantize_sym(t)
+    back = dequantize(q, s)
+    assert float(jnp.abs(back - t).max()) <= float(s) * 0.5 + 1e-6
+    assert int(jnp.abs(q).max()) <= 127
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("h,kvh", [(4, 4), (4, 2), (8, 1)])
+def test_chunked_attention_matches_naive(causal, h, kvh, rng):
+    b, s, d = 2, 96, 32
+    q = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, kvh, s, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, kvh, s, d)), jnp.float32)
+    ref = mha_reference(q, k, v, causal=causal)
+    out = chunked_attention(q, k, v, causal=causal, chunk=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("sq,sk", [(128, 128), (128, 256)])
+def test_pallas_flash_matches_naive(sq, sk, rng):
+    bh, d = 4, 64
+    q = jnp.asarray(rng.standard_normal((bh, sq, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((bh, sk, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((bh, sk, d)), jnp.float32)
+    got = flash_attention_fwd(q, k, v, causal=True, interpret=True)
+    ref = mha_reference(q[:, None].transpose(1, 0, 2, 3),
+                        k[:, None].transpose(1, 0, 2, 3),
+                        v[:, None].transpose(1, 0, 2, 3), causal=True)[0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_attention_decode_offset(rng):
+    b, h, s, d = 1, 2, 64, 16
+    q = jnp.asarray(rng.standard_normal((b, h, 1, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32)
+    pos = 40
+    ref = mha_reference(q, k[:, :, : pos + 1], v[:, :, : pos + 1], causal=False)
+    out = attention(q, k, v, causal=True, impl="chunked", chunk=16, q_offset=pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-5)

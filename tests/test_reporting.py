@@ -1,0 +1,91 @@
+"""Reporting/driver layers: roofline table renderer, hillclimb registry,
+DSE front invariants."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.pareto import non_dominated_mask
+
+
+def test_roofline_renderer_handles_ok_and_skip():
+    from benchmarks.roofline import render_md
+
+    recs = [
+        {"arch": "a", "shape": "train_4k", "mesh": "16x16", "status": "ok",
+         "roofline": {"t_compute": 1.0, "t_memory": 2.0, "t_collective": 0.5,
+                      "bottleneck": "memory"},
+         "memory": {"peak_tpu_estimate_bytes": 8 * 2**30},
+         "fits_hbm": True, "useful_flops_ratio": 0.5},
+        {"arch": "b", "shape": "long_500k", "mesh": "16x16",
+         "status": "SKIP(full-attn)"},
+    ]
+    md = render_md(recs)
+    assert "memory" in md and "SKIP" in md
+    assert md.count("|") > 10
+
+
+def test_hillclimb_registry_well_formed():
+    from repro.launch.hillclimb import EXPERIMENTS
+
+    assert len(EXPERIMENTS) >= 15
+    for name, (hyp, fn) in EXPERIMENTS.items():
+        assert isinstance(hyp, str) and len(hyp) > 5, name
+        assert callable(fn), name
+
+
+def test_dse_front_contains_exact_anchor():
+    """The delivered front always includes the exact reference corner
+    (PSNR cap) — the stage-1 anchor guarantees it."""
+    from repro.accel import MCMAccelerator
+    from repro.core.acl.library import default_library
+    from repro.core.dse import DSEConfig, run_dse
+    from repro.core.nsga2 import NSGA2Config
+
+    lib = default_library()
+    res = run_dse(MCMAccelerator(2), lib, DSEConfig(
+        n_train=16, n_qor_samples=1,
+        nsga=NSGA2Config(pop_size=12, n_parents=6, n_generations=2, seed=3),
+    ))
+    assert non_dominated_mask(res.front_objectives).all()
+    assert (-res.front_objectives[:, 0]).max() >= 99.9  # PSNR cap present
+
+
+def test_perf_log_schema_if_present():
+    import os
+
+    p = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                     "perf_log.json")
+    if not os.path.exists(p):
+        pytest.skip("no perf log in this checkout")
+    log = json.load(open(p))
+    assert len(log) >= 10
+    for rec in log:
+        assert "experiment" in rec and "hypothesis" in rec
+        if rec.get("status") == "ok":
+            assert {"t_compute", "t_memory", "t_collective"} <= set(
+                rec["roofline"])
+
+
+def test_dryrun_records_schema():
+    import os
+
+    d = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+    if not os.path.isdir(d):
+        pytest.skip("no dryrun cache")
+    files = [f for f in os.listdir(d) if f.endswith(".json")]
+    assert len(files) == 80  # 10 archs x 4 shapes x 2 meshes
+    ok = skip = 0
+    for f in files:
+        r = json.load(open(os.path.join(d, f)))
+        if r.get("status") == "ok":
+            ok += 1
+            assert r["fits_hbm"] in (True, False)
+            assert r["roofline"]["bottleneck"] in (
+                "compute", "memory", "collective")
+            assert r["flops_per_device"] > 0
+        else:
+            skip += 1
+            assert r["status"].startswith("SKIP")
+    assert ok == 64 and skip == 16

@@ -1,0 +1,85 @@
+"""Surrogate regression models: every registry entry learns a smooth
+target; key models recover known structure; determinism."""
+
+import numpy as np
+import pytest
+
+from repro.core.surrogates import available, make, pcc, r2
+
+
+def _toy(n=300, d=6, seed=0, noise=0.05):
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((n, d))
+    w = rng.standard_normal(d)
+    y = X @ w + 0.5 * np.sin(2 * X[:, 0]) + X[:, 1] * X[:, 2] * 0.3
+    y = y + noise * rng.standard_normal(n)
+    return X[:200], y[:200], X[200:], y[200:]
+
+
+@pytest.mark.parametrize("name", available())
+def test_model_learns_toy_function(name):
+    Xtr, ytr, Xte, yte = _toy()
+    m = make(name, seed=0).fit(Xtr, ytr)
+    c = pcc(yte, m.predict(Xte))
+    floor = {"sgd": 0.8, "knn_uniform": 0.7, "knn3": 0.7, "knn5": 0.7,
+             "cart_shallow": 0.55, "cart": 0.7, "svr": 0.7,
+             "kernel_ridge_rbf": 0.7}.get(name, 0.85)
+    assert c > floor, (name, c)
+
+
+@pytest.mark.parametrize("name", ["random_forest", "bayesian_ridge", "svr"])
+def test_models_deterministic(name):
+    Xtr, ytr, Xte, _ = _toy()
+    p1 = make(name, seed=3).fit(Xtr, ytr).predict(Xte)
+    p2 = make(name, seed=3).fit(Xtr, ytr).predict(Xte)
+    assert np.array_equal(p1, p2)
+
+
+def test_bayesian_ridge_recovers_linear_weights():
+    rng = np.random.default_rng(1)
+    X = rng.standard_normal((400, 5))
+    w = np.array([1.0, -2.0, 0.5, 0.0, 3.0])
+    y = X @ w + 0.01 * rng.standard_normal(400)
+    m = make("bayesian_ridge").fit(X, y)
+    # model standardizes; compare through predictions on a probe basis
+    probe = np.eye(5)
+    rec = m.predict(probe) - m.predict(np.zeros((1, 5)))
+    assert np.allclose(rec, w, atol=0.05)
+
+
+def test_bayesian_ridge_predictive_std():
+    rng = np.random.default_rng(2)
+    X = rng.standard_normal((100, 3))
+    y = X @ np.array([1.0, 2.0, -1.0]) + 0.1 * rng.standard_normal(100)
+    m = make("bayesian_ridge").fit(X, y)
+    std = m.predict_std(X)
+    assert (std > 0).all()
+    far = m.predict_std(10 * np.ones((1, 3)))
+    assert far[0] > std.mean()  # extrapolation is less certain
+
+
+def test_random_forest_beats_single_tree_on_noise():
+    Xtr, ytr, Xte, yte = _toy(noise=0.4, seed=5)
+    tree = make("cart").fit(Xtr, ytr)
+    forest = make("random_forest").fit(Xtr, ytr)
+    assert r2(yte, forest.predict(Xte)) >= r2(yte, tree.predict(Xte)) - 0.02
+
+
+def test_pcc_properties():
+    a = np.arange(10.0)
+    assert pcc(a, 2 * a + 1) == pytest.approx(1.0)
+    assert pcc(a, -a) == pytest.approx(-1.0)
+    assert pcc(a, np.ones(10)) == 0.0
+
+
+@pytest.mark.parametrize("scale", [1.0, 1e-7, 1e7])
+def test_trees_split_small_magnitude_targets(scale):
+    """Regression: CART/RF must split targets of any magnitude (an
+    absolute SSE-gain epsilon left ~1e-7-scale energy targets constant)."""
+    rng = np.random.default_rng(0)
+    X = rng.standard_normal((200, 4))
+    y = (X[:, 0] * 2 + X[:, 1]) * scale
+    for name in ("cart", "random_forest"):
+        m = make(name).fit(X[:150], y[:150])
+        c = pcc(y[150:], m.predict(X[150:]))
+        assert c > 0.8, (name, scale, c)

@@ -1,0 +1,98 @@
+"""End-to-end system behaviour: training converges, serving generates,
+fault tolerance + training integrate, the paper's DSE runs on an LM."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import ApproxPolicy, reduced
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return reduced(get_config("gemma-2b"), n_layers=2, d_model=32,
+                   n_heads=2, n_kv_heads=1, head_dim=16, d_ff=64,
+                   vocab_size=128)
+
+
+def test_training_reduces_loss(tiny_cfg):
+    from repro.launch.train import train_loop
+
+    _, losses = train_loop(tiny_cfg, steps=60, batch=8, seq=32,
+                           lr=1e-2, log_every=100)
+    first = float(np.mean(losses[:5]))
+    last = float(np.mean(losses[-5:]))
+    assert last < first - 0.3, (first, last)
+
+
+def test_training_with_compression_and_micro(tiny_cfg):
+    from repro.launch.train import train_loop
+
+    _, losses = train_loop(tiny_cfg, steps=25, batch=8, seq=32, n_micro=4,
+                           lr=5e-3, compress=True, log_every=100)
+    assert np.mean(losses[-5:]) < np.mean(losses[:5])
+
+
+def test_training_restart_resumes(tiny_cfg, tmp_path):
+    from repro.launch.train import train_loop
+
+    d = str(tmp_path / "ck")
+    train_loop(tiny_cfg, steps=10, batch=4, seq=16, ckpt_dir=d,
+               ckpt_every=5, log_every=100)
+    # resume to 20 — must pick up at 10, not restart at 0
+    _, losses = train_loop(tiny_cfg, steps=20, batch=4, seq=16, ckpt_dir=d,
+                           ckpt_every=5, log_every=100)
+    assert len(losses) == 10  # only the remaining steps ran
+
+
+def test_serving_generates(tiny_cfg):
+    from repro.launch.serve import serve_batch
+
+    tokens, tps = serve_batch(tiny_cfg, batch=2, prompt_len=8, gen=6)
+    assert tokens.shape == (2, 14)
+    assert tps > 0
+    assert int(tokens.max()) < tiny_cfg.padded_vocab
+
+
+def test_serving_with_approx_policy(tiny_cfg):
+    from repro.launch.serve import serve_batch
+
+    pol = ApproxPolicy({"ffn_in": ("mul8s_trunc2", None)})
+    tokens, _ = serve_batch(tiny_cfg, batch=2, prompt_len=8, gen=4,
+                            policy=pol)
+    assert tokens.shape == (2, 12)
+
+
+def test_lm_dse_end_to_end():
+    """The paper's framework applied to an assigned architecture."""
+    from repro.accel.lm import LMAccelerator, proj_classes_for
+    from repro.core.acl.library import default_library
+    from repro.core.dse import DSEConfig, run_dse
+    from repro.core.nsga2 import NSGA2Config
+
+    cfg = get_config("granite-8b")
+    classes = proj_classes_for(reduced(cfg))
+    assert {"qkv", "ffn_in", "lm_head"} <= {c for c, _ in classes}
+
+    accel = LMAccelerator(cfg, seq=16)
+    lib = default_library()
+    res = run_dse(accel, lib, DSEConfig(
+        n_train=10, n_qor_samples=1,
+        nsga=NSGA2Config(pop_size=8, n_parents=4, n_generations=2, seed=0),
+    ))
+    assert res.front_mask.any()
+    # the front reaches a reasonable-QoR corner even at this tiny budget
+    assert res.true_objectives[:, 0].min() <= -20.0
+
+
+def test_moe_family_dse_classes():
+    from repro.accel.lm import proj_classes_for
+
+    moe = proj_classes_for(reduced(get_config("phi3.5-moe-42b-a6.6b")))
+    assert {"expert_in", "expert_out"} <= {c for c, _ in moe}
+    ssm = proj_classes_for(reduced(get_config("falcon-mamba-7b")))
+    names = {c for c, _ in ssm}
+    assert {"ssm_in", "ssm_out"} <= names
+    assert "qkv" not in names  # attention-free
