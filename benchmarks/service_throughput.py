@@ -1,0 +1,181 @@
+"""Service throughput benchmark -> BENCH_service.json.
+
+Measures the two headline properties of the campaign service
+(repro.service):
+
+  1. **Cold vs warm wall-clock** — the SAME campaign run in two fresh
+     processes sharing one on-disk label store.  The warm run must
+     perform ZERO ground-truth labeling calls (100% store hits) and
+     complete >= 2x faster.
+  2. **Concurrent campaign coalescing** — two identical campaigns
+     submitted concurrently to one manager: the scheduler dedupes every
+     in-flight genome (each unique genome synthesized once), batches
+     carry requests from both campaigns, and both fronts are
+     bit-identical to a direct ``run_dse`` of the same seed.
+
+Run:  PYTHONPATH=src python benchmarks/service_throughput.py
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from common import emit, section  # noqa: E402
+
+SPEC = dict(
+    accel="mcm2",
+    n_train=48,
+    n_qor_samples=2,
+    pop_size=16,
+    n_parents=8,
+    n_generations=4,
+    seed=0,
+)
+
+
+def run_campaign(store_path: str) -> dict:
+    """One campaign against a JSONL store; returns wall + label stats."""
+    from repro.service import CampaignManager, CampaignSpec, JsonlLabelStore
+
+    store = JsonlLabelStore(store_path)
+    mgr = CampaignManager(store, eval_workers=2, campaign_workers=1)
+    t0 = time.perf_counter()
+    cid = mgr.submit(CampaignSpec(**SPEC))
+    state = mgr.wait(cid, timeout=1800)
+    wall = time.perf_counter() - t0
+    assert state == "done", mgr.status(cid).get("error")
+    res = mgr.result(cid)
+    stats = mgr.scheduler.stats()
+    out = {
+        "wall_s": wall,
+        "requests": stats["requests"],
+        "store_hits": stats["store_hits"],
+        "labeled": stats["labeled"],
+        "hit_rate": stats["label_hit_rate"],
+        "front": res.front_objectives.tolist(),
+    }
+    mgr.shutdown()
+    store.close()
+    return out
+
+
+def bench_concurrent() -> dict:
+    """Two identical campaigns on one manager + a direct-run reference."""
+    from repro.core.dse import run_dse
+    from repro.service import CampaignManager, CampaignSpec, make_accelerator
+
+    spec = CampaignSpec(**SPEC)
+    ref = run_dse(make_accelerator(spec.accel), cfg=spec.dse_config())
+
+    mgr = CampaignManager(eval_workers=2, campaign_workers=2)
+    t0 = time.perf_counter()
+    c1, c2 = mgr.submit(spec), mgr.submit(spec)
+    mgr.wait(c1, timeout=1800)
+    mgr.wait(c2, timeout=1800)
+    wall = time.perf_counter() - t0
+    r1, r2 = mgr.result(c1), mgr.result(c2)
+    stats = mgr.scheduler.stats()
+    seed_identical = bool(
+        np.array_equal(r1.front_objectives, r2.front_objectives)
+        and np.allclose(r1.front_objectives, ref.front_objectives)
+    )
+    out = {
+        "wall_s": wall,
+        "campaigns_per_min": 2 / (wall / 60.0),
+        "seed_identical_fronts": seed_identical,
+        "requests": stats["requests"],
+        "labeled": stats["labeled"],
+        "store_hits": stats["store_hits"],
+        "inflight_dedup_hits": stats["inflight_dedup_hits"],
+        "coalesced_batches": stats["coalesced_batches"],
+        "batches": stats["batches"],
+        "mean_batch_size": stats["mean_batch_size"],
+    }
+    mgr.shutdown()
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--child", action="store_true",
+                    help="internal: run one campaign and print JSON stats")
+    ap.add_argument("--store", default=None)
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_service.json"))
+    args = ap.parse_args()
+
+    if args.child:
+        print("CHILD_JSON " + json.dumps(run_campaign(args.store)))
+        return
+
+    report = {}
+
+    # --- 1. cold vs warm across processes ------------------------------
+    section("cold vs warm store (fresh process each)")
+    tmp = tempfile.mkdtemp(prefix="bench_service_")
+    store_path = os.path.join(tmp, "labels.jsonl")
+    runs = {}
+    for phase in ("cold", "warm"):
+        proc = subprocess.run(
+            [sys.executable, os.path.abspath(__file__),
+             "--child", "--store", store_path],
+            capture_output=True, text=True, timeout=1800,
+            env={**os.environ,
+                 "PYTHONPATH": os.path.join(os.path.dirname(__file__), "..", "src")},
+        )
+        assert proc.returncode == 0, proc.stderr[-3000:]
+        line = [ln for ln in proc.stdout.splitlines()
+                if ln.startswith("CHILD_JSON ")][-1]
+        runs[phase] = json.loads(line[len("CHILD_JSON "):])
+        emit(f"service.{phase}_wall", runs[phase]["wall_s"] * 1e6,
+             f"hit_rate={runs[phase]['hit_rate']:.2f}")
+
+    speedup = runs["cold"]["wall_s"] / max(runs["warm"]["wall_s"], 1e-9)
+    emit("service.warm_speedup", runs["warm"]["wall_s"] * 1e6,
+         f"{speedup:.1f}x")
+    report["cold"] = runs["cold"]
+    report["warm"] = runs["warm"]
+    report["warm_speedup"] = speedup
+    report["warm_zero_labeling"] = runs["warm"]["labeled"] == 0
+    report["fronts_match_across_processes"] = (
+        runs["cold"]["front"] == runs["warm"]["front"]
+    )
+    assert report["warm_zero_labeling"], (
+        f"warm run labeled {runs['warm']['labeled']} genomes (expected 0)")
+    assert report["fronts_match_across_processes"], "warm front diverged"
+    if speedup < 2.0:
+        print(f"WARNING: warm speedup {speedup:.2f}x < 2x", file=sys.stderr)
+
+    # --- 2. concurrent campaigns ---------------------------------------
+    section("two concurrent identical campaigns (coalescing + dedup)")
+    conc = bench_concurrent()
+    emit("service.concurrent_pair", conc["wall_s"] * 1e6,
+         f"{conc['campaigns_per_min']:.2f}/min")
+    emit("service.inflight_dedup", float(conc["inflight_dedup_hits"]),
+         f"coalesced_batches={conc['coalesced_batches']}")
+    report["concurrent"] = conc
+    assert conc["seed_identical_fronts"], "concurrent fronts diverged"
+    # campaigns may or may not overlap in flight depending on machine
+    # load; either way each unique genome must be labeled only once
+    assert conc["inflight_dedup_hits"] + conc["store_hits"] > 0, \
+        "no cross-campaign label reuse observed"
+    assert conc["labeled"] < conc["requests"], "duplicate labeling"
+
+    out_path = os.path.abspath(args.out)
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"wrote {out_path}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

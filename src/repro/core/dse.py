@@ -31,7 +31,50 @@ from .nsga2 import NSGA2Config, NSGA2Result, nsga2
 from .pareto import non_dominated_mask
 from .surrogates import make, pcc
 
-__all__ = ["DSEConfig", "DSEResult", "run_dse", "random_search"]
+__all__ = ["DSEConfig", "DSEResult", "run_dse", "random_search",
+           "default_labeler", "label_unique"]
+
+# A labeler maps a (n, g) genome batch to the ground-truth label dict of
+# synth.label_variants.  run_dse takes one by injection so the labeling
+# substrate is swappable: the default is the old in-process path (per-call
+# synthesis cache, discarded at return); the service layer
+# (repro.service) injects a scheduler-backed labeler with a persistent
+# cross-campaign store, in-flight dedup and coalesced batching.
+
+
+def default_labeler(
+    accel: "Accelerator",
+    library: Library,
+    *,
+    rank_genes: bool = False,
+    n_qor_samples: int = 4,
+    qor_seed: int = synth.DEFAULT_QOR_SEED,
+    cache: Optional[dict] = None,
+):
+    """The in-process labeler ``run_dse`` uses when none is injected."""
+    synth_cache = {} if cache is None else cache
+    qor_inputs = accel.sample_inputs(n_qor_samples, seed=qor_seed)
+
+    def labeler(genomes: np.ndarray) -> Dict[str, np.ndarray]:
+        return synth.label_variants(
+            accel, genomes, library,
+            rank_genes=rank_genes, qor_inputs=qor_inputs, cache=synth_cache,
+        )
+
+    return labeler
+
+
+def label_unique(labeler, genomes: np.ndarray) -> Dict[str, np.ndarray]:
+    """Label a batch paying ground truth only for UNIQUE genomes.
+
+    NSGA-II survivor sets routinely contain repeated genomes (elitism
+    keeps copies of strong designs); labels are a pure function of the
+    genome, so duplicates are labeled once and scattered back."""
+    genomes = np.atleast_2d(genomes)
+    uniq, inverse = np.unique(genomes, axis=0, return_inverse=True)
+    labels = labeler(uniq)
+    # scatter back (also undoes np.unique's row sort)
+    return {k: np.asarray(v)[inverse] for k, v in labels.items()}
 
 
 @dataclass(frozen=True)
@@ -92,14 +135,27 @@ def run_dse(
     library: Optional[Library] = None,
     cfg: DSEConfig = DSEConfig(),
     *,
+    labeler=None,
+    surrogate_provider=None,
     verbose: bool = False,
 ) -> DSEResult:
+    """The three-stage DSE.  ``labeler`` (genomes -> label dict) and
+    ``surrogate_provider`` ((obj, model_name, X, y) -> fitted model) are
+    injectable so the service layer can swap in its persistent label
+    store / coalescing scheduler / warm surrogate registry; the defaults
+    reproduce the classic one-shot in-process behavior exactly."""
     library = library or default_library()
     rng = np.random.default_rng(cfg.seed)
     gene_sizes = accel.gene_sizes(library, rank_genes=cfg.rank_genes)
     timings: Dict[str, float] = {}
-    synth_cache: dict = {}
-    qor_inputs = accel.sample_inputs(cfg.n_qor_samples, seed=1234)
+    if labeler is None:
+        labeler = default_labeler(
+            accel, library,
+            rank_genes=cfg.rank_genes, n_qor_samples=cfg.n_qor_samples,
+        )
+    if surrogate_provider is None:
+        def surrogate_provider(obj, name, X, y):
+            return make(name, seed=cfg.seed).fit(X, y)
 
     # ---------------- stage 1: model training -----------------------------
     t0 = time.perf_counter()
@@ -108,10 +164,7 @@ def run_dse(
     # always include the exact reference design (standard DSE practice:
     # the known-good corner anchors both the surrogates and the front)
     train_genomes[0] = accel.exact_genome(library, rank_genes=cfg.rank_genes)
-    train_labels = synth.label_variants(
-        accel, train_genomes, library,
-        rank_genes=cfg.rank_genes, qor_inputs=qor_inputs, cache=synth_cache,
-    )
+    train_labels = label_unique(labeler, train_genomes)
     timings["label"] = time.perf_counter() - t0
 
     t0 = time.perf_counter()
@@ -127,10 +180,11 @@ def run_dse(
         m = make(name, seed=cfg.seed).fit(X[tr], train_labels[obj][tr])
         models[obj] = m
         val_pcc[obj] = pcc(train_labels[obj][va], m.predict(X[va]))
-    # refit on everything for the search
+    # refit on everything for the search (via the provider, so a warm
+    # surrogate registry can reuse/extend fitted models across campaigns)
     for obj in cfg.objectives:
         name = cfg.qor_model if obj == "qor" else cfg.hw_model
-        models[obj] = make(name, seed=cfg.seed).fit(X, train_labels[obj])
+        models[obj] = surrogate_provider(obj, name, X, train_labels[obj])
     timings["train"] = time.perf_counter() - t0
     if verbose:
         print(f"[dse:{accel.name}] val PCC: "
@@ -162,11 +216,11 @@ def run_dse(
     timings["explore"] = time.perf_counter() - t0
 
     # ---------------- stage 3: final evaluation ---------------------------
+    # dedupe before labeling: elitist survivors repeat, and each repeat
+    # would otherwise pay full ground truth whenever the labeler's cache
+    # keys miss (e.g. across rank-gene settings)
     t0 = time.perf_counter()
-    final_labels = synth.label_variants(
-        accel, search.genomes, library,
-        rank_genes=cfg.rank_genes, qor_inputs=qor_inputs, cache=synth_cache,
-    )
+    final_labels = label_unique(labeler, search.genomes)
     timings["final_eval"] = time.perf_counter() - t0
 
     # the delivered Pareto front is over EVERY synthesized point (search
@@ -211,6 +265,7 @@ def random_search(
     objectives: Tuple[str, ...] = ("qor", "energy"),
     rank_genes: bool = False,
     seed: int = 0,
+    labeler=None,
 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Baseline for Figs. 8/9: label n random variants, return
     (genomes, objectives, front_mask)."""
@@ -218,7 +273,10 @@ def random_search(
     rng = np.random.default_rng(seed)
     gene_sizes = accel.gene_sizes(library, rank_genes=rank_genes)
     genomes = rng.integers(0, gene_sizes[None, :], size=(n, len(gene_sizes)))
-    labels = synth.label_variants(accel, genomes, library,
-                                  rank_genes=rank_genes, cache={})
+    # same default labeler as run_dse (QoR inputs from DEFAULT_QOR_SEED),
+    # so injected-labeler and in-process baselines are apples-to-apples
+    if labeler is None:
+        labeler = default_labeler(accel, library, rank_genes=rank_genes)
+    labels = label_unique(labeler, genomes)
     obj = _objective_matrix(labels, objectives)
     return genomes, obj, non_dominated_mask(obj)

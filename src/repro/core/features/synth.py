@@ -30,10 +30,22 @@ __all__ = [
     "synthesize_variant",
     "circuit_features_synth",
     "label_variants",
+    "LABEL_KEYS",
+    "DEFAULT_QOR_SEED",
     "SYNTH_AC_DIM",
 ]
 
 SYNTH_AC_DIM = 6
+
+# the per-genome record label_variants produces (the service label
+# store persists exactly these keys — keep the two in sync by import)
+LABEL_KEYS = ("qor", "latency", "energy", "flops", "hbm_bytes",
+              "synth_time", "sim_time")
+
+# default seed for the QoR evaluation inputs: shared by the in-process
+# default labeler (core/dse.py) and the service EvalContext so both
+# paths label identically (and derive identical store keys)
+DEFAULT_QOR_SEED = 1234
 
 
 class SynthResult(dict):
@@ -43,11 +55,13 @@ class SynthResult(dict):
 def _compile_cost(fn, args) -> Dict[str, float]:
     import jax
 
+    from ...dist.compat import compiled_cost_analysis
+
     t0 = time.perf_counter()
     lowered = jax.jit(fn).lower(*args)
     compiled = lowered.compile()
     wall = time.perf_counter() - t0
-    ca = compiled.cost_analysis() or {}
+    ca = compiled_cost_analysis(compiled)
     flops = float(ca.get("flops", 0.0))
     byts = float(ca.get("bytes accessed", 0.0))
     rt = hw.roofline(flops, byts, 0.0)
@@ -185,12 +199,8 @@ def label_variants(
     genomes = np.atleast_2d(genomes)
     n = len(genomes)
     if qor_inputs is None:
-        qor_inputs = accel.sample_inputs(4, seed=123)
-    out = {
-        k: np.zeros(n)
-        for k in ("qor", "latency", "energy", "flops", "hbm_bytes",
-                  "synth_time", "sim_time")
-    }
+        qor_inputs = accel.sample_inputs(4, seed=DEFAULT_QOR_SEED)
+    out = {k: np.zeros(n) for k in LABEL_KEYS}
     for t, g in enumerate(genomes):
         circuits, ranks = accel.decode(g, library, rank_genes=rank_genes)
         sr = synthesize_variant(accel, circuits, ranks, cache=cache)

@@ -1,0 +1,2 @@
+"""Distributed substrate: logical-axis sharding rules and jax-version
+compatibility helpers (see ``sharding`` and ``compat``)."""

@@ -1,0 +1,225 @@
+"""Logical-axis sharding rules (GSPMD "logical axis annotation" idiom).
+
+Model code names array dimensions *logically* — ``("batch", "seq",
+"act_embed")`` — and never mentions mesh axes.  This module owns the
+mapping from logical names to mesh axes:
+
+  * ``DEFAULT_RULES`` — the global defaults (FSDP weights over "data",
+    tensor-parallel weights/activations over "model", batch over
+    ("pod", "data"), decode KV sequence over "model"),
+  * ``rule_overrides`` — a (thread-local, re-entrant) context manager
+    that layers per-cell / per-arch overrides on top; ``active_rules()``
+    returns the currently layered overrides,
+  * ``spec_for`` — rule resolution to a ``PartitionSpec`` with the two
+    safety properties every caller relies on: an axis is never used for
+    two dimensions of one array, and a dimension that is not divisible
+    by its shard count falls back toward replication (tuple rules apply
+    the longest divisible *prefix*),
+  * ``sharding_for`` — ``NamedSharding`` built from ``spec_for``,
+  * ``constrain`` — ``with_sharding_constraint`` against the ambient
+    mesh (a no-op outside any mesh context: single-device tests and the
+    behavioral simulators never pay for it),
+  * ``constrain_cotangent`` — identity forward, constrains the
+    *cotangent* in the backward pass (weight-gradient sharding inside
+    scanned/remat'd blocks, where the fwd constraint alone does not
+    reach the grads).
+"""
+
+from __future__ import annotations
+
+import functools
+import threading
+from contextlib import contextmanager
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+AxisSpec = Union[None, str, Tuple[str, ...]]
+AxisRules = Dict[str, AxisSpec]
+
+__all__ = [
+    "AxisRules",
+    "DEFAULT_RULES",
+    "active_rules",
+    "rule_overrides",
+    "spec_for",
+    "sharding_for",
+    "constrain",
+    "constrain_cotangent",
+]
+
+# Logical-name -> mesh-axis defaults.  Weight axes: FSDP on "data",
+# tensor parallel on "model".  Activation ("act_*") axes mirror their
+# weight counterparts; "batch" spreads over every data-parallel axis.
+DEFAULT_RULES: AxisRules = {
+    # weight axes
+    "embed": "data",
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "expert_mlp": "model",
+    "experts": "data",
+    "norm": None,
+    "state": None,
+    "conv": None,
+    "dt": None,
+    # activation axes
+    "batch": ("pod", "data"),
+    "seq": None,
+    "kv_seq": "model",
+    "act_embed": None,
+    "act_mlp": "model",
+    "act_heads": "model",
+    "act_experts": "data",
+}
+
+
+_local = threading.local()
+
+
+def _stack() -> list:
+    if not hasattr(_local, "stack"):
+        _local.stack = []
+    return _local.stack
+
+
+def active_rules() -> AxisRules:
+    """The merged override layers currently in effect (NOT including
+    DEFAULT_RULES — resolution merges defaults underneath)."""
+    merged: AxisRules = {}
+    for layer in _stack():
+        merged.update(layer)
+    return merged
+
+
+@contextmanager
+def rule_overrides(rules: Optional[AxisRules]):
+    """Layer ``rules`` over the active overrides for the duration of the
+    context.  Later layers win; a value of ``None`` un-shards the axis."""
+    _stack().append(dict(rules or {}))
+    try:
+        yield
+    finally:
+        _stack().pop()
+
+
+def _mesh_shape(mesh) -> Dict[str, int]:
+    return dict(mesh.shape)
+
+
+def spec_for(
+    logical: Sequence[Optional[str]],
+    shape: Sequence[int],
+    mesh,
+    rules: Optional[AxisRules] = None,
+):
+    """Resolve logical axis names to a PartitionSpec on ``mesh``.
+
+    Guarantees: (a) each mesh axis is used at most once per array,
+    (b) a dimension keeps only the longest prefix of its rule's axes
+    whose cumulative shard count divides the dimension (single-axis
+    rules therefore fall back to replication when non-divisible)."""
+    from jax.sharding import PartitionSpec
+
+    merged: AxisRules = {**DEFAULT_RULES, **active_rules(), **(rules or {})}
+    sizes = _mesh_shape(mesh)
+    used: set = set()
+    entries = []
+    for name, dim in zip(logical, shape):
+        rule = merged.get(name) if name is not None else None
+        if rule is None:
+            entries.append(None)
+            continue
+        axes = (rule,) if isinstance(rule, str) else tuple(rule)
+        picked = []
+        shards = 1
+        for a in axes:
+            n = int(sizes.get(a, 1))
+            if a in used or n <= 1 or dim % (shards * n) != 0:
+                break
+            picked.append(a)
+            shards *= n
+        used.update(picked)
+        if not picked:
+            entries.append(None)
+        elif isinstance(rule, str):
+            entries.append(picked[0])
+        else:
+            entries.append(tuple(picked))
+    return PartitionSpec(*entries)
+
+
+def sharding_for(
+    logical: Sequence[Optional[str]],
+    shape: Sequence[int],
+    mesh,
+    rules: Optional[AxisRules] = None,
+):
+    from jax.sharding import NamedSharding
+
+    return NamedSharding(mesh, spec_for(logical, shape, mesh, rules))
+
+
+def _ambient_mesh():
+    """The physical mesh of the enclosing mesh context, or None.
+
+    Works with the legacy ``with mesh:`` context (jax <= 0.4.x, what
+    ``dist.compat.mesh_context`` uses there) and with ``jax.set_mesh``
+    on newer jax."""
+    import jax
+
+    try:  # newer jax: ambient (possibly abstract) mesh from set_mesh
+        m = jax.sharding.get_abstract_mesh()  # type: ignore[attr-defined]
+        if m is not None and not m.empty:
+            return m
+    except AttributeError:
+        pass
+    try:
+        m = jax.interpreters.pxla.thread_resources.env.physical_mesh
+        if m is not None and not m.empty:
+            return m
+    except AttributeError:
+        pass
+    return None
+
+
+def constrain(x, logical: Sequence[Optional[str]]):
+    """``with_sharding_constraint(x, <resolved spec>)`` against the
+    ambient mesh; identity when no mesh context is active."""
+    import jax
+
+    mesh = _ambient_mesh()
+    if mesh is None:
+        return x
+    spec = spec_for(logical, x.shape, mesh)
+    try:
+        from jax.sharding import NamedSharding
+
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    except (TypeError, ValueError):
+        # abstract mesh (set_mesh) path: bare PartitionSpec is accepted
+        return jax.lax.with_sharding_constraint(x, spec)
+
+
+@functools.lru_cache(maxsize=1)
+def _build_cc():
+    import jax
+
+    @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+    def cc(logical, x):
+        return x
+
+    def fwd(logical, x):
+        return x, None
+
+    def bwd(logical, _res, g):
+        return (constrain(g, logical),)
+
+    cc.defvjp(fwd, bwd)
+    return cc
+
+
+def constrain_cotangent(x, logical: Sequence[Optional[str]]):
+    """Identity on the forward value; applies ``constrain`` to the
+    cotangent on the backward pass.  Used inside scanned transformer
+    blocks so per-layer weight *gradients* land sharded."""
+    return _build_cc()(tuple(logical), x)

@@ -116,11 +116,9 @@ def main(argv: Optional[list] = None):
     elif jax.device_count() >= 256:
         mesh = make_production_mesh()
     else:  # validation mesh on whatever is available
-        n = jax.device_count()
-        mesh = jax.make_mesh(
-            (n,), ("data",),
-            axis_types=(jax.sharding.AxisType.Auto,),
-        )
+        from ..dist.compat import make_mesh
+
+        mesh = make_mesh((jax.device_count(),), ("data",))
 
     rules = cell_rules(cfg, "train_4k", mesh)
     pipe = TokenPipeline(cfg.vocab_size, args.batch, args.seq, seed=0)
@@ -130,7 +128,9 @@ def main(argv: Optional[list] = None):
         make_train_step(cfg, opt, n_micro=nm), donate_argnums=(0,)
     )
 
-    with jax.set_mesh(mesh), rule_overrides(rules):
+    from ..dist.compat import mesh_context
+
+    with mesh_context(mesh), rule_overrides(rules):
         specs = param_specs(cfg)
         latest = ckpt.latest_step(args.ckpt_dir) if pi == 0 else None
         params = init_tree(specs, jax.random.PRNGKey(0))

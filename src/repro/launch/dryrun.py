@@ -96,8 +96,10 @@ def lower_cell(
         # observed on jamba) instead of reduce-scattering them
         return jax.tree.map(lambda s: s.sharding, tree)
 
+    from ..dist.compat import mesh_context
+
     t0 = time.perf_counter()
-    with jax.set_mesh(mesh), rules_ctx:
+    with mesh_context(mesh), rules_ctx:
         if spec["kind"] == "train":
             nm = n_micro or n_microbatches(cfg, mesh)
             rec["n_micro"] = nm
@@ -138,8 +140,10 @@ def lower_cell(
         compiled = lowered.compile()
         t_compile = time.perf_counter() - t0
 
+    from ..dist.compat import compiled_cost_analysis
+
     mem = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    ca = compiled_cost_analysis(compiled)
     hlo = compiled.as_text()
     # Trip-count-aware analysis of the partitioned HLO (XLA's aggregate
     # cost_analysis counts while bodies once — useless for scanned stacks).

@@ -35,6 +35,11 @@ def main():
     ap.add_argument("--pipeline", default="D", choices=list("BCDEF"))
     ap.add_argument("--rank-genes", action="store_true",
                     help="beyond-paper: correction rank as a DSE axis")
+    ap.add_argument("--store", default=None,
+                    help="persistent JSONL label store: ground-truth labels "
+                         "are reused across runs (repro.service.store)")
+    ap.add_argument("--eval-workers", type=int, default=2,
+                    help="labeling worker threads when --store is set")
     ap.add_argument("--out", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -52,15 +57,37 @@ def main():
         ),
         seed=args.seed,
     )
-    res = run_dse(accel, lib, cfg, verbose=True)
+
+    labeler = scheduler = None
+    if args.store:
+        from ..service.scheduler import EvalScheduler
+        from ..service.store import EvalContext, JsonlLabelStore
+
+        store = JsonlLabelStore(args.store)
+        scheduler = EvalScheduler(store, n_workers=args.eval_workers)
+        ctx = EvalContext(accel, lib, rank_genes=args.rank_genes,
+                          n_qor_samples=cfg.n_qor_samples)
+        print(f"[dse-lm] label store {args.store}: {len(store)} entries")
+
+        def labeler(genomes):
+            return scheduler.label(ctx, genomes)
+
+    res = run_dse(accel, lib, cfg, labeler=labeler, verbose=True)
+    if scheduler is not None:
+        s = scheduler.stats()
+        print(f"[dse-lm] labeling: {s['requests']} requests, "
+              f"{s['store_hits']} store hits, {s['labeled']} synthesized "
+              f"(hit rate {s['label_hit_rate']:.0%})")
+        scheduler.shutdown()
 
     print(f"\n[dse-lm] {accel.name}")
     print(f"  surrogate validation PCC: "
           + ", ".join(f"{k}={v:.3f}" for k, v in res.val_pcc.items()))
     print(f"  timings: " + ", ".join(
         f"{k}={v:.1f}s" for k, v in res.timings.items()))
+    # search.genomes already includes the stage-1 training sample
     print(f"  surrogate evaluations: {res.search.n_evaluated} "
-          f"(vs {res.config.n_train + len(res.search.genomes)} synth calls)")
+          f"(vs {len(res.search.genomes)} synth calls)")
     front = res.front_objectives
     order = np.argsort(front[:, 0])
     print(f"  Pareto front ({len(front)} designs)  [PSNR dB, energy J]:")

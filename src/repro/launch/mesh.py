@@ -9,7 +9,7 @@ intra-pod FSDP/TP axes (DESIGN.md §5).
 
 from __future__ import annotations
 
-import jax
+from ..dist.compat import make_mesh
 
 __all__ = ["make_production_mesh"]
 
@@ -17,6 +17,4 @@ __all__ = ["make_production_mesh"]
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)

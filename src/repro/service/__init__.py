@@ -1,0 +1,40 @@
+"""Pareto-as-a-service: DSE campaigns as a long-lived service.
+
+The one-shot ``run_dse`` pays the full ground-truth bill (XLA synthesis +
+behavioral simulation per variant) on every invocation and discards the
+labels at exit.  This package makes exploration a *service*:
+
+  * ``store``      — persistent, content-addressed ground-truth label
+                     store; labels from any campaign's stage 1/3 are
+                     reused by every later campaign (cross-process),
+  * ``scheduler``  — continuous-batching evaluation scheduler: coalesces
+                     label requests from concurrent campaigns, dedupes
+                     identical genomes in flight, fans batches out to a
+                     worker pool,
+  * ``campaigns``  — campaign manager + surrogate registry (warm fitted
+                     surrogates keyed by (accel, pipeline, model)),
+  * ``api``        — stdlib HTTP front end (``python -m repro.service``)
+                     with submit/status/result and Pareto-front queries.
+"""
+
+from .store import (
+    EvalContext,
+    InMemoryLabelStore,
+    JsonlLabelStore,
+    LabelStore,
+    label_key,
+)
+from .scheduler import EvalScheduler
+from .campaigns import CampaignManager, CampaignSpec, make_accelerator
+
+__all__ = [
+    "EvalContext",
+    "LabelStore",
+    "InMemoryLabelStore",
+    "JsonlLabelStore",
+    "label_key",
+    "EvalScheduler",
+    "CampaignManager",
+    "CampaignSpec",
+    "make_accelerator",
+]

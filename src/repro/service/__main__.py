@@ -1,0 +1,50 @@
+"""Entry point: ``PYTHONPATH=src python -m repro.service``.
+
+Starts the campaign service with a persistent on-disk label store —
+every ground-truth label any campaign pays for is reused by all later
+campaigns, across restarts."""
+
+from __future__ import annotations
+
+import argparse
+
+from .api import serve
+from .campaigns import CampaignManager
+from .store import JsonlLabelStore
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.service",
+        description="Pareto-as-a-service: concurrent DSE campaigns with a "
+                    "persistent label store and coalesced evaluation batching",
+    )
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8177)
+    ap.add_argument("--store", default="runs/service_labels.jsonl",
+                    help="JSONL label-store path (persistent across runs)")
+    ap.add_argument("--eval-workers", type=int, default=2,
+                    help="ground-truth labeling worker threads")
+    ap.add_argument("--campaign-workers", type=int, default=2,
+                    help="concurrently running campaigns")
+    ap.add_argument("--max-batch", type=int, default=32,
+                    help="max label requests coalesced per batch")
+    ap.add_argument("--max-wait-ms", type=float, default=20.0,
+                    help="batch admission window (milliseconds)")
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args(argv)
+
+    store = JsonlLabelStore(args.store)
+    print(f"[service] label store {args.store}: {len(store)} entries")
+    manager = CampaignManager(
+        store,
+        eval_workers=args.eval_workers,
+        campaign_workers=args.campaign_workers,
+        max_batch=args.max_batch,
+        max_wait_s=args.max_wait_ms / 1e3,
+    )
+    serve(manager, args.host, args.port, quiet=not args.verbose)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,194 @@
+"""HTTP front end for the campaign service (stdlib-only).
+
+Endpoints (JSON in/out):
+
+    POST /campaigns              {spec fields}        -> {"id": ...}
+    GET  /campaigns              -> [{id, state, accel}, ...]
+    GET  /campaigns/<id>         -> status record
+    GET  /campaigns/<id>/result  -> summary (val_pcc, timings, front size)
+    GET  /campaigns/<id>/front   -> the campaign's true Pareto front
+    GET  /front?accel=<name>     -> merged non-dominated front over every
+                                    completed campaign for that accelerator
+    GET  /stats                  -> store/scheduler/surrogate counters
+    GET  /healthz                -> {"ok": true}
+
+Run it with ``python -m repro.service`` (see __main__.py).  ``Client``
+is a matching urllib convenience wrapper used by the examples/tests.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+import urllib.parse
+import urllib.request
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Dict, Optional, Tuple
+
+from .campaigns import CampaignManager, CampaignSpec
+
+__all__ = ["make_server", "serve", "Client"]
+
+
+def _campaign_summary(mgr: CampaignManager, cid: str) -> Dict:
+    status = mgr.status(cid)
+    if status["state"] != "done":
+        return status
+    res = mgr.result(cid)
+    status["front"] = res.front_objectives.tolist()
+    # compacted results keep only the front but remember the true count
+    status["n_designs"] = int(getattr(res, "n_designs",
+                                      len(res.true_objectives)))
+    return status
+
+
+class _Handler(BaseHTTPRequestHandler):
+    # set by make_server:
+    manager: CampaignManager = None
+    quiet: bool = True
+
+    def log_message(self, fmt, *args):  # noqa: A003 - BaseHTTPRequestHandler API
+        if not self.quiet:
+            super().log_message(fmt, *args)
+
+    # ------------------------------------------------------------------
+    def _send(self, obj, code: int = 200) -> None:
+        body = json.dumps(obj, default=float).encode()
+        self.send_response(code)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def _error(self, code: int, msg: str) -> None:
+        self._send({"error": msg}, code)
+
+    def _route(self) -> Tuple[str, Dict[str, str]]:
+        path, _, query = self.path.partition("?")
+        params = {k: v[0] for k, v in urllib.parse.parse_qs(query).items()}
+        return path.rstrip("/") or "/", params
+
+    # ------------------------------------------------------------------
+    def do_GET(self):  # noqa: N802 - BaseHTTPRequestHandler API
+        mgr = self.manager
+        path, params = self._route()
+        try:
+            if path == "/healthz":
+                return self._send({"ok": True})
+            if path == "/stats":
+                return self._send(mgr.stats())
+            if path == "/campaigns":
+                return self._send(mgr.list_campaigns())
+            if path == "/front":
+                accel = params.get("accel")
+                if not accel:
+                    return self._error(400, "missing ?accel=<name>")
+                objectives = tuple(
+                    params["objectives"].split(",")
+                ) if params.get("objectives") else ("qor", "energy")
+                return self._send(mgr.global_front(accel, objectives))
+            m = re.fullmatch(r"/campaigns/([\w-]+)(/result|/front)?", path)
+            if m:
+                cid, sub = m.group(1), m.group(2)
+                if sub == "/front":
+                    return self._send(mgr.front(cid))
+                if sub == "/result":
+                    return self._send(_campaign_summary(mgr, cid))
+                return self._send(mgr.status(cid))
+            return self._error(404, f"no route {path}")
+        except KeyError:
+            return self._error(404, "unknown campaign")
+        except RuntimeError as exc:
+            return self._error(409, str(exc))
+        except Exception as exc:  # noqa: BLE001 - JSON 500 over a torn socket
+            return self._error(500, f"{type(exc).__name__}: {exc}")
+
+    def do_POST(self):  # noqa: N802 - BaseHTTPRequestHandler API
+        path, _ = self._route()
+        if path != "/campaigns":
+            return self._error(404, f"no route {path}")
+        try:
+            n = int(self.headers.get("Content-Length", 0))
+            payload = json.loads(self.rfile.read(n) or b"{}")
+            spec = CampaignSpec.from_dict(payload)
+        except (json.JSONDecodeError, TypeError, ValueError) as exc:
+            return self._error(400, f"bad campaign spec: {exc}")
+        try:
+            cid = self.manager.submit(spec)
+        except Exception as exc:  # noqa: BLE001 - JSON 500 over a torn socket
+            return self._error(500, f"{type(exc).__name__}: {exc}")
+        self._send({"id": cid, "state": "queued"}, 202)
+
+
+def make_server(
+    manager: CampaignManager,
+    host: str = "127.0.0.1",
+    port: int = 8177,
+    *,
+    quiet: bool = True,
+) -> ThreadingHTTPServer:
+    handler = type("Handler", (_Handler,), {"manager": manager, "quiet": quiet})
+    return ThreadingHTTPServer((host, port), handler)
+
+
+def serve(manager, host="127.0.0.1", port=8177, *, quiet=False) -> None:
+    srv = make_server(manager, host, port, quiet=quiet)
+    print(f"[service] listening on http://{host}:{srv.server_address[1]}")
+    try:
+        srv.serve_forever()
+    except KeyboardInterrupt:
+        print("\n[service] shutting down")
+    finally:
+        srv.server_close()
+        manager.shutdown()
+
+
+class Client:
+    """Minimal urllib client for the service API."""
+
+    def __init__(self, base: str):
+        self.base = base.rstrip("/")
+
+    def _req(self, path: str, payload: Optional[Dict] = None):
+        url = self.base + path
+        if payload is None:
+            req = urllib.request.Request(url)
+        else:
+            req = urllib.request.Request(
+                url, data=json.dumps(payload).encode(),
+                headers={"Content-Type": "application/json"}, method="POST",
+            )
+        with urllib.request.urlopen(req, timeout=600) as resp:
+            return json.loads(resp.read())
+
+    def submit(self, **spec) -> str:
+        return self._req("/campaigns", spec)["id"]
+
+    def status(self, cid: str) -> Dict:
+        return self._req(f"/campaigns/{cid}")
+
+    def result(self, cid: str) -> Dict:
+        return self._req(f"/campaigns/{cid}/result")
+
+    def front(self, cid: str) -> Dict:
+        return self._req(f"/campaigns/{cid}/front")
+
+    def global_front(self, accel: str,
+                     objectives: Optional[Tuple[str, ...]] = None) -> Dict:
+        q = f"/front?accel={accel}"
+        if objectives:
+            q += "&objectives=" + ",".join(objectives)
+        return self._req(q)
+
+    def stats(self) -> Dict:
+        return self._req("/stats")
+
+    def wait(self, cid: str, timeout: float = 600.0, poll: float = 0.25) -> Dict:
+        import time
+
+        t0 = time.time()
+        while True:
+            st = self.status(cid)
+            if st["state"] in ("done", "failed") or time.time() - t0 > timeout:
+                return st
+            time.sleep(poll)

@@ -1,0 +1,464 @@
+"""Campaign manager + warm surrogate registry.
+
+A *campaign* is one ``run_dse`` invocation owned by the service: its
+ground-truth labeling runs through the shared ``EvalScheduler`` (store
+reuse + in-flight dedup + coalesced batches) and its surrogate fits go
+through the ``SurrogateRegistry`` (warm fitted models keyed by
+``(eval context, pipeline, objective, model, seed)``).
+
+Warm-surrogate modes (``CampaignSpec.warm_surrogates``):
+
+  * ``"reuse"`` (default) — an exact match on the training-set digest
+    returns the already-fitted model with NO refit; results stay
+    bit-identical to a cold run (same data -> same fit).
+  * ``"accumulate"`` — a key match with NEW data refits on the union of
+    everything the registry has seen for that key (incremental refit
+    instead of a from-scratch retrain on a larger, redundant sample).
+    Deliberately trades bit-reproducibility for surrogate quality.
+  * ``"off"`` — always fit fresh.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import threading
+import time
+import uuid
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import asdict, dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.dse import DSEConfig, DSEResult, run_dse
+from ..core.nsga2 import NSGA2Config
+from ..core.pareto import non_dominated_mask
+from ..core.surrogates import make
+from .scheduler import EvalScheduler
+from .store import EvalContext, InMemoryLabelStore, LabelStore
+
+__all__ = [
+    "CampaignSpec",
+    "CampaignManager",
+    "SurrogateRegistry",
+    "make_accelerator",
+]
+
+
+def make_accelerator(name: str):
+    """Accelerator factory for service requests.
+
+    ``mcm1``..``mcm4`` (HEVC DCT rows), ``hevc_dct4x4``, ``gaussian3x3``
+    and ``lm:<arch>`` (e.g. ``lm:granite-8b``)."""
+    from ..accel import GaussianFilter, HEVCDct, MCMAccelerator
+
+    if name.startswith("mcm"):
+        row = int(name[3:]) - 1
+        if not 0 <= row < 4:
+            raise ValueError(f"unknown MCM accelerator {name!r}")
+        return MCMAccelerator(row)
+    if name == "hevc_dct4x4":
+        return HEVCDct()
+    if name == "gaussian3x3":
+        return GaussianFilter()
+    if name.startswith("lm:"):
+        from ..accel.lm import LMAccelerator
+        from ..configs import get_config
+
+        return LMAccelerator(get_config(name[3:]))
+    raise ValueError(f"unknown accelerator {name!r}")
+
+
+@dataclass(frozen=True)
+class CampaignSpec:
+    """A serializable DSE request (what the HTTP API accepts)."""
+
+    accel: str = "mcm2"
+    pipeline: str = "D"
+    qor_model: str = "random_forest"
+    hw_model: str = "bayesian_ridge"
+    objectives: Tuple[str, ...] = ("qor", "energy")
+    n_train: int = 80
+    n_qor_samples: int = 4
+    rank_genes: bool = False
+    warm_start: bool = True
+    pop_size: int = 48
+    n_parents: int = 16
+    n_generations: int = 10
+    seed: int = 0
+    warm_surrogates: str = "reuse"   # "reuse" | "accumulate" | "off"
+
+    def __post_init__(self):
+        if self.warm_surrogates not in ("reuse", "accumulate", "off"):
+            raise ValueError(
+                f"warm_surrogates must be 'reuse', 'accumulate' or 'off', "
+                f"got {self.warm_surrogates!r}"
+            )
+
+    def dse_config(self) -> DSEConfig:
+        return DSEConfig(
+            pipeline=self.pipeline,
+            hw_model=self.hw_model,
+            qor_model=self.qor_model,
+            objectives=tuple(self.objectives),
+            n_train=self.n_train,
+            n_qor_samples=self.n_qor_samples,
+            rank_genes=self.rank_genes,
+            warm_start=self.warm_start,
+            nsga=NSGA2Config(
+                pop_size=self.pop_size,
+                n_parents=self.n_parents,
+                n_generations=self.n_generations,
+                seed=self.seed,
+            ),
+            seed=self.seed,
+        )
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "CampaignSpec":
+        d = dict(d)
+        if "objectives" in d:
+            d["objectives"] = tuple(d["objectives"])
+        return cls(**d)
+
+
+class SurrogateRegistry:
+    """Fitted surrogates kept warm across campaigns."""
+
+    def __init__(self, max_models: int = 64):
+        self._lock = threading.Lock()
+        self._models: Dict[Tuple, Dict] = {}   # key -> {digest, model, ...}
+        self._data: Dict[Tuple, Dict[bytes, Tuple]] = {}  # key -> row pool
+        # service is long-lived: bound retention (dict order = insertion
+        # order, so eviction drops the oldest key and its row pool)
+        self.max_models = int(max_models)
+        self.fits = 0
+        self.refits = 0
+        self.reuse_hits = 0
+
+    def _store_model(self, key: Tuple, ent: Dict) -> None:
+        """Insert under the lock, evicting the oldest beyond max_models."""
+        self._models.pop(key, None)  # re-insert moves key to newest
+        self._models[key] = ent
+        while len(self._models) > self.max_models:
+            oldest = next(iter(self._models))
+            del self._models[oldest]
+            self._data.pop(oldest, None)
+
+    @staticmethod
+    def _digest(X: np.ndarray, y: np.ndarray) -> str:
+        h = hashlib.sha256(np.ascontiguousarray(X).tobytes())
+        h.update(np.ascontiguousarray(y).tobytes())
+        return h.hexdigest()[:24]
+
+    def provider(self, ctx_fp: str, spec: CampaignSpec):
+        """A ``surrogate_provider(obj, model_name, X, y)`` for run_dse,
+        bound to one evaluation context + campaign settings."""
+        mode = spec.warm_surrogates
+
+        def provide(obj: str, model_name: str, X: np.ndarray, y: np.ndarray):
+            if mode == "off":
+                with self._lock:
+                    self.fits += 1
+                return make(model_name, seed=spec.seed).fit(X, y)
+            key = (ctx_fp, spec.pipeline, obj, model_name, spec.seed)
+            digest = self._digest(X, y)
+            with self._lock:
+                ent = self._models.get(key)
+                if ent is not None and ent["digest"] == digest:
+                    self.reuse_hits += 1
+                    self._store_model(key, ent)  # refresh LRU recency
+                    return ent["model"]
+            if mode == "accumulate":
+                with self._lock:
+                    pool = self._data.setdefault(key, {})
+                    for xi, yi in zip(X, y):
+                        # key rows by (x, y) so distinct genomes mapping
+                        # to one feature vector but different ground
+                        # truth both survive instead of last-write-wins
+                        rk = (np.ascontiguousarray(xi).tobytes(),
+                              float(yi).hex())
+                        pool[rk] = (xi, yi)
+                    rows = list(pool.values())
+                Xa = np.stack([r[0] for r in rows])
+                ya = np.array([r[1] for r in rows])
+                model = make(model_name, seed=spec.seed).fit(Xa, ya)
+                with self._lock:
+                    refit = key in self._models
+                    self.refits += int(refit)
+                    self.fits += int(not refit)
+                    self._store_model(key, {"digest": digest, "model": model,
+                                            "rows": len(rows)})
+                return model
+            # mode == "reuse": fit on exactly this data, cache by digest
+            model = make(model_name, seed=spec.seed).fit(X, y)
+            with self._lock:
+                self.fits += 1
+                self._store_model(key, {"digest": digest, "model": model,
+                                        "rows": len(X)})
+            return model
+
+        return provide
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {
+                "models": len(self._models),
+                "fits": self.fits,
+                "refits": self.refits,
+                "reuse_hits": self.reuse_hits,
+            }
+
+
+@dataclass
+class _Campaign:
+    id: str
+    spec: CampaignSpec
+    state: str = "queued"            # queued | running | done | failed
+    submitted_at: float = field(default_factory=time.time)
+    started_at: Optional[float] = None
+    finished_at: Optional[float] = None
+    error: Optional[str] = None
+    result: Optional[DSEResult] = None
+    done_evt: threading.Event = field(default_factory=threading.Event)
+
+
+class _CompactResult:
+    """What remains of a DSEResult after retention compaction: the
+    Pareto front and summary stats; the heavy train/search arrays
+    (train genomes/labels, full NSGA-II population) are dropped."""
+
+    def __init__(self, res):
+        self.accel_name = res.accel_name
+        self.config = res.config
+        self.val_pcc = res.val_pcc
+        self.timings = res.timings
+        self.front_genomes = np.array(res.front_genomes)
+        self.front_objectives = np.array(res.front_objectives)
+        self.true_objectives = self.front_objectives
+        self.front_mask = np.ones(len(self.front_genomes), dtype=bool)
+        self.n_designs = int(len(res.true_objectives))
+
+
+class CampaignManager:
+    """Owns the store, the scheduler, the surrogate registry and a pool
+    of campaign-runner threads.  The HTTP front end (``api.py``) is a
+    thin shell over this object; tests drive it in-process."""
+
+    def __init__(
+        self,
+        store: Optional[LabelStore] = None,
+        *,
+        scheduler: Optional[EvalScheduler] = None,
+        eval_workers: int = 2,
+        campaign_workers: int = 2,
+        max_batch: int = 32,
+        max_wait_s: float = 0.02,
+        keep_results: int = 128,
+        keep_campaigns: int = 2048,
+    ):
+        self.store = store if store is not None else InMemoryLabelStore()
+        self.scheduler = scheduler or EvalScheduler(
+            self.store, n_workers=eval_workers,
+            max_batch=max_batch, max_wait_s=max_wait_s,
+        )
+        self.registry = SurrogateRegistry()
+        self._pool = ThreadPoolExecutor(
+            campaign_workers, thread_name_prefix="campaign"
+        )
+        self._lock = threading.Lock()
+        self._campaigns: Dict[str, _Campaign] = {}
+        self._seq = 0
+        # the service is long-lived: beyond the newest keep_results
+        # finished campaigns, results are compacted to their fronts;
+        # beyond keep_campaigns, records are dropped entirely
+        self.keep_results = int(keep_results)
+        self.keep_campaigns = int(keep_campaigns)
+
+    # ------------------------------------------------------------------
+    def submit(self, spec: CampaignSpec) -> str:
+        # pick up labels other processes appended to a shared store file
+        if hasattr(self.store, "refresh"):
+            self.store.refresh()
+        with self._lock:
+            self._seq += 1
+            cid = f"c{self._seq:04d}-{uuid.uuid4().hex[:6]}"
+            c = _Campaign(id=cid, spec=spec)
+            self._campaigns[cid] = c
+        self._pool.submit(self._run, c)
+        return cid
+
+    def _run(self, c: _Campaign) -> None:
+        c.state = "running"
+        c.started_at = time.time()
+        try:
+            spec = c.spec
+            accel = make_accelerator(spec.accel)
+            from ..core.acl.library import default_library
+
+            library = default_library()
+            ctx = EvalContext(
+                accel, library,
+                rank_genes=spec.rank_genes,
+                n_qor_samples=spec.n_qor_samples,
+            )
+
+            def labeler(genomes):
+                return self.scheduler.label(ctx, genomes, campaign=c.id)
+
+            provider = self.registry.provider(ctx.fingerprint, spec)
+            c.result = run_dse(
+                accel, library, spec.dse_config(),
+                labeler=labeler, surrogate_provider=provider,
+            )
+            c.state = "done"
+        except Exception as exc:  # noqa: BLE001 - campaign isolation
+            c.state = "failed"
+            c.error = f"{type(exc).__name__}: {exc}"
+        finally:
+            c.finished_at = time.time()
+            c.done_evt.set()
+            self._evict()
+
+    def _evict(self) -> None:
+        """Bound retention: compact old finished campaigns to their
+        fronts, drop the very oldest records (and their scheduler
+        accounting) entirely."""
+        dropped = []
+        with self._lock:
+            finished = sorted(
+                (c for c in self._campaigns.values()
+                 if c.state in ("done", "failed") and c.finished_at),
+                key=lambda c: c.finished_at,
+            )
+            n_drop = max(0, len(finished) - self.keep_campaigns)
+            for c in finished[:n_drop]:
+                del self._campaigns[c.id]
+                dropped.append(c.id)
+            for c in finished[n_drop:max(0, len(finished)
+                                         - self.keep_results)]:
+                if isinstance(c.result, DSEResult):
+                    c.result = _CompactResult(c.result)
+        for cid in dropped:
+            self.scheduler.forget_campaign(cid)
+
+    # ------------------------------------------------------------------
+    def _get(self, cid: str) -> _Campaign:
+        with self._lock:
+            if cid not in self._campaigns:
+                raise KeyError(cid)
+            return self._campaigns[cid]
+
+    def wait(self, cid: str, timeout: Optional[float] = None) -> str:
+        c = self._get(cid)
+        c.done_evt.wait(timeout)
+        return c.state
+
+    def status(self, cid: str) -> Dict:
+        c = self._get(cid)
+        out = {
+            "id": c.id,
+            "state": c.state,
+            "spec": {**asdict(c.spec),
+                     "objectives": list(c.spec.objectives)},
+            "submitted_at": c.submitted_at,
+            "started_at": c.started_at,
+            "finished_at": c.finished_at,
+            "error": c.error,
+        }
+        sched = self.scheduler.campaign_stats(c.id)
+        if sched:
+            out["labeling"] = sched
+        if c.result is not None:
+            # _run sets c.result before the finally that stamps
+            # finished_at, so a concurrent poll can land between the two
+            fin = c.finished_at
+            out["wall_s"] = (fin if fin is not None
+                             else time.time()) - c.started_at
+            out["val_pcc"] = c.result.val_pcc
+            out["timings"] = c.result.timings
+            out["front_size"] = int(c.result.front_mask.sum())
+        return out
+
+    def list_campaigns(self) -> List[Dict]:
+        with self._lock:
+            return [{"id": c.id, "state": c.state, "accel": c.spec.accel}
+                    for c in self._campaigns.values()]
+
+    def result(self, cid: str) -> DSEResult:
+        c = self._get(cid)
+        if c.state == "failed":
+            raise RuntimeError(f"campaign {cid} failed: {c.error}")
+        if c.result is None:
+            raise RuntimeError(f"campaign {cid} not finished (state={c.state})")
+        return c.result
+
+    def front(self, cid: str) -> Dict:
+        """The campaign's true Pareto front as JSON-ready lists."""
+        res = self.result(cid)
+        return {
+            "id": cid,
+            "accel": res.accel_name,
+            "objectives": list(res.config.objectives),
+            "genomes": res.front_genomes.tolist(),
+            "front": res.front_objectives.tolist(),
+        }
+
+    def global_front(self, accel: str,
+                     objectives: Tuple[str, ...] = ("qor", "energy")) -> Dict:
+        """Merged non-dominated front over every completed campaign for
+        one accelerator (the service's cumulative Pareto knowledge)."""
+        genomes: List[np.ndarray] = []
+        objs: List[np.ndarray] = []
+        sources: List[str] = []
+        with self._lock:
+            done = [c for c in self._campaigns.values()
+                    if c.state == "done" and c.result is not None
+                    and c.spec.accel == accel
+                    and tuple(c.spec.objectives) == tuple(objectives)]
+            # labels are only comparable within one evaluation context
+            # (rank_genes changes genome width, n_qor_samples changes
+            # qor values): merge the most recent campaign's context only
+            if done:
+                latest = max(done, key=lambda c: c.finished_at or 0.0)
+                ctx = (latest.spec.rank_genes, latest.spec.n_qor_samples)
+                done = [
+                    c for c in done
+                    if (c.spec.rank_genes, c.spec.n_qor_samples) == ctx
+                ]
+        for c in done:
+            genomes.append(c.result.front_genomes)
+            objs.append(c.result.front_objectives)
+            sources += [c.id] * len(c.result.front_genomes)
+        if not genomes:
+            return {"accel": accel, "objectives": list(objectives),
+                    "genomes": [], "front": [], "campaigns": []}
+        G = np.concatenate(genomes)
+        O = np.concatenate(objs)
+        # dedupe identical genomes, then keep the non-dominated set
+        _, uniq = np.unique(G, axis=0, return_index=True)
+        G, O = G[uniq], O[uniq]
+        src = [sources[i] for i in uniq]
+        mask = non_dominated_mask(O)
+        return {
+            "accel": accel,
+            "objectives": list(objectives),
+            "genomes": G[mask].tolist(),
+            "front": O[mask].tolist(),
+            "campaigns": sorted({s for s, m in zip(src, mask) if m}),
+        }
+
+    def stats(self) -> Dict:
+        with self._lock:
+            by_state: Dict[str, int] = {}
+            for c in self._campaigns.values():
+                by_state[c.state] = by_state.get(c.state, 0) + 1
+        return {
+            "campaigns": by_state,
+            "scheduler": self.scheduler.stats(),
+            "surrogates": self.registry.stats(),
+        }
+
+    def shutdown(self, *, wait: bool = True) -> None:
+        self._pool.shutdown(wait=wait)
+        self.scheduler.shutdown(wait=wait)

@@ -1,0 +1,293 @@
+"""Continuous-batching evaluation scheduler.
+
+Ground-truth labeling (XLA synthesis + behavioral simulation) dominates
+every campaign's wall clock, so the service routes ALL label requests
+through one scheduler that
+
+  * answers from the label store when it can (cross-campaign and
+    cross-process reuse),
+  * **dedupes identical genomes in flight** — if campaign B asks for a
+    genome campaign A is already synthesizing, B rides A's future
+    instead of paying a second compile,
+  * **coalesces** outstanding misses from all concurrent campaigns into
+    batches (the JetStream/vLLM continuous-batching idiom: a short
+    admission window, then drain up to ``max_batch`` compatible
+    requests) and fans them out to a thread worker pool.
+
+Requests are only batched together when they share an evaluation
+context (same accelerator / library / QoR signature) — a batch is one
+``ctx.ground_truth`` call.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from .store import LABEL_KEYS, EvalContext, LabelStore
+
+__all__ = ["EvalScheduler"]
+
+
+@dataclass
+class _Entry:
+    """One in-flight unique genome: a shared future plus the campaigns
+    waiting on it (for coalescing accounting)."""
+
+    key: str
+    genome: np.ndarray
+    ctx: EvalContext
+    origin: Optional[str] = None  # campaign that pays the ground truth
+    future: Future = field(default_factory=Future)
+    campaigns: set = field(default_factory=set)
+
+
+class EvalScheduler:
+    """Coalescing label scheduler over a ``LabelStore``.
+
+    ``label(ctx, genomes)`` is the blocking batch interface campaigns
+    inject into ``run_dse`` as their labeler; ``submit`` is the
+    future-based building block underneath it."""
+
+    def __init__(
+        self,
+        store: LabelStore,
+        *,
+        n_workers: int = 2,
+        max_batch: int = 32,
+        max_wait_s: float = 0.02,
+    ):
+        self.store = store
+        self.max_batch = int(max_batch)
+        self.max_wait_s = float(max_wait_s)
+        self._pool = ThreadPoolExecutor(n_workers, thread_name_prefix="eval")
+        self._cv = threading.Condition()
+        self._pending: deque = deque()          # _Entry awaiting dispatch
+        self._inflight: Dict[str, _Entry] = {}  # key -> entry (pending or running)
+        self._stopped = False
+        # accounting — running counters only: the service is long-lived,
+        # so per-batch history would grow (and stats() rescans) unbounded
+        self.n_requests = 0
+        self.n_store_hits = 0
+        self.n_inflight_hits = 0
+        self.n_labeled = 0
+        self.n_batches = 0
+        self.n_coalesced_batches = 0
+        self.sum_batch_sizes = 0
+        self.per_campaign: Dict[str, Dict[str, int]] = {}
+        self._batcher = threading.Thread(
+            target=self._batch_loop, name="eval-batcher", daemon=True
+        )
+        self._batcher.start()
+
+    # ------------------------------------------------------------------
+    def _campaign_stats(self, campaign: Optional[str]) -> Dict[str, int]:
+        cid = campaign or "_anon"
+        if cid not in self.per_campaign:
+            self.per_campaign[cid] = {
+                "requests": 0, "store_hits": 0, "inflight_hits": 0,
+                "labeled": 0,
+            }
+        return self.per_campaign[cid]
+
+    def submit(
+        self,
+        ctx: EvalContext,
+        genomes: np.ndarray,
+        *,
+        campaign: Optional[str] = None,
+    ) -> List[Future]:
+        """One future per genome row; resolved futures for store hits."""
+        genomes = np.atleast_2d(np.asarray(genomes, dtype=np.int64))
+        futures: List[Future] = []
+        to_enqueue: List[_Entry] = []
+        with self._cv:
+            if self._stopped:
+                raise RuntimeError("scheduler is shut down")
+            cstats = self._campaign_stats(campaign)
+            for g in genomes:
+                self.n_requests += 1
+                cstats["requests"] += 1
+                key = ctx.key(g)
+                ent = self._inflight.get(key)
+                if ent is not None:
+                    # identical genome already queued/being labeled:
+                    # share its future (in-flight dedup)
+                    self.n_inflight_hits += 1
+                    cstats["inflight_hits"] += 1
+                    if campaign is not None:
+                        ent.campaigns.add(campaign)
+                    futures.append(ent.future)
+                    continue
+                rec = self.store.get(key)
+                if rec is not None:
+                    self.n_store_hits += 1
+                    cstats["store_hits"] += 1
+                    f: Future = Future()
+                    f.set_result(rec)
+                    futures.append(f)
+                    continue
+                ent = _Entry(key=key, genome=np.array(g), ctx=ctx,
+                             origin=campaign)
+                if campaign is not None:
+                    ent.campaigns.add(campaign)
+                self._inflight[key] = ent
+                to_enqueue.append(ent)
+                futures.append(ent.future)
+            self._pending.extend(to_enqueue)
+            if to_enqueue:
+                self._cv.notify_all()
+        return futures
+
+    def label(
+        self,
+        ctx: EvalContext,
+        genomes: np.ndarray,
+        *,
+        campaign: Optional[str] = None,
+        timeout: Optional[float] = None,
+    ) -> Dict[str, np.ndarray]:
+        """Blocking batch labeling — the drop-in ``run_dse`` labeler."""
+        genomes = np.atleast_2d(np.asarray(genomes, dtype=np.int64))
+        futures = self.submit(ctx, genomes, campaign=campaign)
+        recs = [f.result(timeout=timeout) for f in futures]
+        return {
+            k: np.array([float(r[k]) for r in recs]) for k in LABEL_KEYS
+        }
+
+    # ------------------------------------------------------------------
+    def _batch_loop(self) -> None:
+        while True:
+            with self._cv:
+                while not self._pending and not self._stopped:
+                    self._cv.wait()
+                if self._stopped and not self._pending:
+                    return
+            # admission window: let concurrently-submitting campaigns
+            # land their requests so the drain below coalesces them
+            if self.max_wait_s > 0:
+                time.sleep(self.max_wait_s)
+            batch: List[_Entry] = []
+            bad: List = []  # (entry, exc) whose ctx.fingerprint raised
+            with self._cv:
+                if not self._pending:
+                    continue
+                # drain up to max_batch entries sharing the head's context
+                head_fp = None
+                keep: deque = deque()
+                while self._pending:
+                    ent = self._pending.popleft()
+                    try:
+                        fp = ent.ctx.fingerprint
+                    except Exception as exc:  # noqa: BLE001 - caller ctx
+                        self._inflight.pop(ent.key, None)
+                        bad.append((ent, exc))
+                        continue
+                    if head_fp is None:
+                        head_fp = fp
+                    if len(batch) < self.max_batch and fp == head_fp:
+                        batch.append(ent)
+                    else:
+                        keep.append(ent)
+                self._pending = keep
+            # a misbehaving caller context must fail its waiters, never
+            # kill the batcher thread
+            for ent, exc in bad:
+                ent.future.set_exception(exc)
+            if not batch:
+                continue
+            try:
+                self._pool.submit(self._run_batch, batch)
+            except RuntimeError as exc:
+                # pool already shut down (shutdown(wait=False) race):
+                # fail the waiters instead of leaving futures unresolved
+                with self._cv:
+                    for e in batch:
+                        self._inflight.pop(e.key, None)
+                for e in batch:
+                    e.future.set_exception(exc)
+
+    def _run_batch(self, batch: List[_Entry]) -> None:
+        ctx = batch[0].ctx
+        try:
+            genomes = np.stack([e.genome for e in batch])
+            labels = ctx.ground_truth(genomes)
+            recs = []
+            for i, e in enumerate(batch):
+                rec = {k: float(labels[k][i]) for k in LABEL_KEYS}
+                self.store.put(e.key, rec)
+                recs.append(rec)
+        except Exception as exc:
+            # label OR store failure: fail every waiter instead of
+            # leaving dead inflight entries that hang future dedup hits
+            with self._cv:
+                for e in batch:
+                    self._inflight.pop(e.key, None)
+            for e in batch:
+                e.future.set_exception(exc)
+            return
+        with self._cv:
+            # e.campaigns is mutated by submit() under this lock, so the
+            # union must happen here too
+            campaigns = set()
+            for e in batch:
+                campaigns |= e.campaigns
+                # the originating request pays ground truth — accounted
+                # on success so failed batches don't overstate work
+                self._campaign_stats(e.origin)["labeled"] += 1
+            self.n_labeled += len(batch)
+            self.n_batches += 1
+            self.n_coalesced_batches += len(campaigns) > 1
+            self.sum_batch_sizes += len(batch)
+            for e in batch:
+                self._inflight.pop(e.key, None)
+        for rec, e in zip(recs, batch):
+            e.future.set_result(rec)
+
+    # ------------------------------------------------------------------
+    def stats(self) -> Dict:
+        with self._cv:
+            return {
+                "requests": self.n_requests,
+                "store_hits": self.n_store_hits,
+                "inflight_dedup_hits": self.n_inflight_hits,
+                "labeled": self.n_labeled,
+                "batches": self.n_batches,
+                "coalesced_batches": self.n_coalesced_batches,
+                "mean_batch_size": (
+                    self.sum_batch_sizes / self.n_batches
+                ) if self.n_batches else 0.0,
+                "label_hit_rate": (
+                    (self.n_store_hits + self.n_inflight_hits)
+                    / self.n_requests
+                ) if self.n_requests else 0.0,
+                "per_campaign": {k: dict(v)
+                                 for k, v in self.per_campaign.items()},
+                "store": self.store.stats(),
+            }
+
+    def campaign_stats(self, campaign: str) -> Optional[Dict[str, int]]:
+        """One campaign's labeling counters — O(1), unlike stats()."""
+        with self._cv:
+            s = self.per_campaign.get(campaign)
+            return dict(s) if s is not None else None
+
+    def forget_campaign(self, campaign: str) -> None:
+        """Drop a retired campaign's per-campaign accounting (the
+        global counters keep its contribution)."""
+        with self._cv:
+            self.per_campaign.pop(campaign, None)
+
+    def shutdown(self, *, wait: bool = True) -> None:
+        with self._cv:
+            self._stopped = True
+            self._cv.notify_all()
+        if wait:
+            self._batcher.join(timeout=5)
+        self._pool.shutdown(wait=wait)

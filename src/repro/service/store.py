@@ -1,0 +1,317 @@
+"""Persistent, content-addressed ground-truth label store.
+
+A label is the full ``synth.label_variants`` record for ONE genome under
+ONE evaluation context.  The key is a digest of everything the label is
+a pure function of:
+
+    (accelerator fingerprint, library fingerprint, rank_genes,
+     QoR-input signature, genome bytes)
+
+so a store written by one campaign (or one process) is safely readable
+by any later campaign: a hit is bit-identical to re-running synthesis +
+simulation, and a context change (different circuit library, different
+accelerator wiring, different QoR sample set) changes the key and misses
+cleanly instead of serving stale labels.
+
+Two implementations of the small ``LabelStore`` interface:
+
+  * ``InMemoryLabelStore`` — a dict; the service's hot tier and the
+    drop-in replacement for the old per-call ``synth_cache``,
+  * ``JsonlLabelStore``    — append-only JSON-lines file on disk with an
+    in-memory index; concurrent writers append under a lock, readers
+    see every record from any prior process.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import numpy as np
+
+from ..core.acl.library import Library
+from ..core.features import synth
+
+__all__ = [
+    "LABEL_KEYS",
+    "STORE_SCHEMA_VERSION",
+    "EvalContext",
+    "label_key",
+    "LabelStore",
+    "InMemoryLabelStore",
+    "JsonlLabelStore",
+]
+
+# the per-genome record produced by synth.label_variants
+LABEL_KEYS = synth.LABEL_KEYS
+
+# bump when the label semantics change (e.g. a new energy model): old
+# store files then miss instead of serving stale ground truth
+STORE_SCHEMA_VERSION = 1
+
+
+# fixed probe operands per circuit kind for behavioral fingerprinting
+_PROBE_OPS = {
+    "mul8u": (np.arange(0, 256, 15, dtype=np.int64),
+              np.arange(255, -1, -15, dtype=np.int64)),
+    "mul8s": (np.arange(-128, 128, 15, dtype=np.int64),
+              np.arange(127, -129, -15, dtype=np.int64)),
+    "add16": (np.arange(-32768, 32768, 3855, dtype=np.int64),
+              np.arange(32767, -32769, -3855, dtype=np.int64)),
+}
+
+
+def _library_fingerprint(library: Library) -> str:
+    """Digest of the genome decoding map AND circuit content.
+
+    Genomes store indices into the per-kind lists, so order and names
+    matter — but so does each circuit's behavior: structural knobs plus
+    a fixed behavioral probe of ``fn`` are hashed so that editing a
+    circuit without renaming it re-keys the store instead of serving
+    stale persisted labels."""
+    h = hashlib.sha256()
+    for kind, circuits in sorted(library.by_kind.items()):
+        for c in circuits:
+            h.update(repr((kind, c.name, c.trunc_bits, c.pp_rows,
+                           c.carry_window, bool(c.is_exact),
+                           c.native_width)).encode())
+            probe = _PROBE_OPS.get(kind)
+            if probe is not None:
+                out = np.asarray(c.fn(*probe)).astype(np.int64)
+                h.update(out.tobytes())
+    return h.hexdigest()[:16]
+
+
+def _accel_fingerprint(accel) -> str:
+    """Digest of the accelerator's labeling-relevant structure.
+
+    Accelerators may expose ``label_fingerprint()`` for extra state their
+    labels depend on; otherwise common identity knobs (init seed, input
+    batch/seq) are picked up by attribute convention."""
+    try:
+        shape = tuple(int(v) for v in accel.matmul_shape())
+    except NotImplementedError:
+        shape = ()
+    sig = {
+        "name": accel.name,
+        "slots": [(s.name, s.kind, float(s.weight)) for s in accel.slots],
+        "matmul_shape": shape,
+        "passes": int(getattr(accel, "deploy_passes", 1)),
+    }
+    if hasattr(accel, "label_fingerprint"):
+        sig["extra"] = str(accel.label_fingerprint())
+    else:
+        sig["extra"] = {
+            k: repr(getattr(accel, k))
+            for k in ("seed", "batch", "seq") if hasattr(accel, k)
+        }
+    return hashlib.sha256(
+        json.dumps(sig, sort_keys=True).encode()
+    ).hexdigest()[:16]
+
+
+@dataclass
+class EvalContext:
+    """Everything a ground-truth label is conditioned on, bundled with
+    the machinery to produce labels for a genome batch.
+
+    ``fingerprint`` keys the store; ``ground_truth`` is the slow path
+    (XLA synthesis + behavioral simulation).  A per-context synthesis
+    cache keeps the old spec-level compile reuse within a process."""
+
+    accel: object
+    library: Library
+    rank_genes: bool = False
+    n_qor_samples: int = 4
+    qor_seed: int = synth.DEFAULT_QOR_SEED
+    _fp: Optional[str] = field(default=None, repr=False)
+    _qor_inputs: Optional[np.ndarray] = field(default=None, repr=False)
+    _synth_cache: dict = field(default_factory=dict, repr=False)
+
+    @property
+    def fingerprint(self) -> str:
+        if self._fp is None:
+            sig = "|".join([
+                f"v{STORE_SCHEMA_VERSION}",
+                _accel_fingerprint(self.accel),
+                _library_fingerprint(self.library),
+                f"rank_genes={int(self.rank_genes)}",
+                f"qor={self.n_qor_samples}@{self.qor_seed}",
+            ])
+            self._fp = hashlib.sha256(sig.encode()).hexdigest()[:24]
+        return self._fp
+
+    @property
+    def qor_inputs(self) -> np.ndarray:
+        if self._qor_inputs is None:
+            self._qor_inputs = self.accel.sample_inputs(
+                self.n_qor_samples, seed=self.qor_seed
+            )
+        return self._qor_inputs
+
+    def key(self, genome: np.ndarray) -> str:
+        return label_key(self.fingerprint, genome)
+
+    def ground_truth(self, genomes: np.ndarray) -> Dict[str, np.ndarray]:
+        """The slow path: label a genome batch from scratch."""
+        return synth.label_variants(
+            self.accel, np.atleast_2d(genomes), self.library,
+            rank_genes=self.rank_genes, qor_inputs=self.qor_inputs,
+            cache=self._synth_cache,
+        )
+
+
+def label_key(ctx_fingerprint: str, genome: np.ndarray) -> str:
+    g = np.asarray(genome, dtype=np.int64)
+    h = hashlib.sha256(ctx_fingerprint.encode())
+    h.update(g.tobytes())
+    return h.hexdigest()[:32]
+
+
+class LabelStore:
+    """Interface: map ``key -> {label name -> float}`` with hit/miss
+    accounting.  Implementations must be thread-safe."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: str) -> Optional[Dict[str, float]]:
+        with self._lock:
+            rec = self._get(key)
+            if rec is None:
+                self.misses += 1
+            else:
+                self.hits += 1
+            return rec
+
+    def put(self, key: str, labels: Dict[str, float]) -> None:
+        rec = {k: float(labels[k]) for k in LABEL_KEYS}
+        with self._lock:
+            self._put(key, rec)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return self._len()
+
+    def stats(self) -> Dict[str, float]:
+        with self._lock:
+            n = self._len()
+            total = self.hits + self.misses
+            return {
+                "entries": n,
+                "hits": self.hits,
+                "misses": self.misses,
+                "hit_rate": (self.hits / total) if total else 0.0,
+            }
+
+    # implementations override (called under the lock):
+    def _get(self, key: str) -> Optional[Dict[str, float]]:
+        raise NotImplementedError
+
+    def _put(self, key: str, rec: Dict[str, float]) -> None:
+        raise NotImplementedError
+
+    def _len(self) -> int:
+        raise NotImplementedError
+
+
+class InMemoryLabelStore(LabelStore):
+    """Dict-backed store — the service's hot tier, and what the old
+    per-``run_dse`` ``synth_cache`` becomes under the store interface."""
+
+    def __init__(self):
+        super().__init__()
+        self._data: Dict[str, Dict[str, float]] = {}
+
+    def _get(self, key):
+        return self._data.get(key)
+
+    def _put(self, key, rec):
+        self._data[key] = rec
+
+    def _len(self):
+        return len(self._data)
+
+
+class JsonlLabelStore(LabelStore):
+    """Append-only JSON-lines store with an in-memory index.
+
+    One record per line: ``{"k": <key>, "l": {<labels>}, "t": <unix>}``.
+    Appends are flushed per batch; a fresh process replays the file into
+    its index at construction, so labels persist across campaigns AND
+    processes.  Duplicate keys are benign (last write wins on replay —
+    labels are deterministic, so duplicates carry identical values)."""
+
+    def __init__(self, path: str):
+        super().__init__()
+        self.path = str(path)
+        self._data: Dict[str, Dict[str, float]] = {}
+        self._offset = 0  # bytes already replayed; refresh parses the tail
+        os.makedirs(os.path.dirname(os.path.abspath(self.path)), exist_ok=True)
+        self._replay()
+        # line-buffered append handle; opened lazily on first put
+        self._fh = None
+
+    def _replay(self) -> None:
+        """Parse records appended since the last replay (tail-seek, so a
+        refresh is O(new bytes), not O(file))."""
+        if not os.path.exists(self.path):
+            return
+        with open(self.path) as f:
+            f.seek(self._offset)
+            while True:
+                pos = f.tell()
+                line = f.readline()
+                if not line or not line.endswith("\n"):
+                    # EOF, or a torn tail from a concurrent writer:
+                    # leave the offset here so it is re-read next time
+                    self._offset = pos
+                    return
+                try:
+                    rec = json.loads(line)
+                    self._data[rec["k"]] = rec["l"]
+                except (json.JSONDecodeError, KeyError):
+                    pass  # malformed complete line: skip permanently
+
+    def refresh(self) -> int:
+        """Re-read the backing file (pick up other processes' appends).
+        Returns the number of entries after the refresh."""
+        with self._lock:
+            self._replay()
+            return len(self._data)
+
+    def _get(self, key):
+        return self._data.get(key)
+
+    def _put(self, key, rec):
+        known = key in self._data
+        self._data[key] = rec
+        if known:
+            return  # labels are deterministic: skip the duplicate append
+        if self._fh is None:
+            self._fh = open(self.path, "a")
+        self._fh.write(json.dumps({"k": key, "l": rec, "t": time.time()},
+                                  sort_keys=True) + "\n")
+        self._fh.flush()
+
+    def _len(self):
+        return len(self._data)
+
+    def close(self) -> None:
+        with self._lock:
+            if self._fh is not None:
+                self._fh.close()
+                self._fh = None
+
+    def __del__(self):  # best-effort
+        try:
+            self.close()
+        except Exception:
+            pass

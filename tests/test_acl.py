@@ -3,6 +3,8 @@ tables, error statistics, SVD factorization."""
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

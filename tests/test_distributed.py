@@ -34,11 +34,6 @@ def test_spec_for_fallback_and_uniqueness():
 
     from repro.dist.sharding import spec_for
 
-    mesh = jax.make_mesh(
-        (1,), ("model",),
-        axis_types=(jax.sharding.AxisType.Auto,),
-    )
-
     class FakeMesh:
         shape = {"data": 16, "model": 16, "pod": 2}
 
@@ -102,9 +97,9 @@ def test_sharded_train_step_matches_single_device():
         s1, m1 = step1(init_state(params, opt), batch)
 
         # 2x4 mesh
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
-        with jax.set_mesh(mesh):
+        from repro.dist.compat import make_mesh, mesh_context
+        mesh = make_mesh((2, 4), ("data", "model"))
+        with mesh_context(mesh):
             step2 = jax.jit(make_train_step(cfg, opt, n_micro=2,
                                             attn_chunk=16, scan_chunk=8))
             s2, m2 = step2(init_state(params, opt), batch)
@@ -128,8 +123,8 @@ def test_compressed_psum_shard_map():
         from jax.experimental.shard_map import shard_map
         from repro.optim.compress import compressed_psum
 
-        mesh = jax.make_mesh((8,), ("pod",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.dist.compat import make_mesh
+        mesh = make_mesh((8,), ("pod",))
         x = jnp.asarray(np.random.default_rng(0).standard_normal((8, 64)),
                         jnp.float32)
 
@@ -152,8 +147,8 @@ def test_elastic_checkpoint_reshard():
         from jax.sharding import PartitionSpec as P, NamedSharding
         from repro.checkpoint import ckpt
 
-        mesh8 = jax.make_mesh((8,), ("data",),
-                              axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.dist.compat import make_mesh
+        mesh8 = make_mesh((8,), ("data",))
         sh8 = NamedSharding(mesh8, P("data"))
         tree = {"w": jax.device_put(jnp.arange(64.0).reshape(8, 8), sh8)}
         d = tempfile.mkdtemp()
@@ -172,13 +167,14 @@ def test_elastic_checkpoint_reshard():
 
 
 @pytest.mark.slow
-def test_dryrun_entrypoint_single_cell():
+def test_dryrun_entrypoint_single_cell(tmp_path):
     """The dry-run driver itself (512 fake devices) on the smallest arch."""
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC
     out = subprocess.run(
         [sys.executable, "-m", "repro.launch.dryrun",
-         "--arch", "seamless", "--shape", "decode_32k"],
+         "--arch", "seamless", "--shape", "decode_32k",
+         "--out", str(tmp_path / "dryrun")],
         capture_output=True, text=True, env=env, timeout=420,
     )
     assert out.returncode == 0, out.stderr[-2000:]

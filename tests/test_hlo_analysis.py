@@ -48,7 +48,9 @@ def test_scan_multiplies_flops_by_trip_count():
     expect = trips * 2 * m**3
     assert cost.flops == pytest.approx(expect, rel=0.01)
     # ... and XLA's own aggregate misses the multiplier
-    xla = float((compiled.cost_analysis() or {}).get("flops", 0.0))
+    from repro.dist.compat import compiled_cost_analysis
+
+    xla = float(compiled_cost_analysis(compiled).get("flops", 0.0))
     assert xla < expect
 
 
