@@ -1,0 +1,166 @@
+"""Hierarchical vs flat joint-genome search -> BENCH_hierarchy.json.
+
+The paper's scalability claim (§V) on the repo's first multi-stage
+workload, ``smoothed_dct`` (Gaussian 3x3 -> HEVC 4x4 DCT, 45-slot joint
+genome):
+
+  * **flat**       — one ``run_dse`` campaign over the joint genome
+                     (product space ~1e56), via the campaign service,
+  * **hierarchical** — one campaign per stage (run CONCURRENTLY through
+                     the ``CampaignManager``), per-stage fronts composed
+                     with incremental pruning, composed candidates
+                     re-labeled end-to-end.
+
+Headline metrics (the ISSUE-2 acceptance criteria):
+
+  * hierarchical ground-truth labels <= 60% of the flat campaign's,
+  * verified-front hypervolume >= the flat front's (within 1%),
+  * >= 2 per-stage campaigns demonstrably in flight at once.
+
+Run:  PYTHONPATH=src python benchmarks/hierarchy.py
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from common import emit, section  # noqa: E402
+
+# The flat campaign trains on the 45-gene PRODUCT space, so it needs (and
+# gets) a much larger ground-truth sample; the hierarchical run must reach
+# at least its front quality on <= 60% of the labels.
+FLAT = dict(n_train=200, n_qor_samples=2, pop_size=32, n_parents=16,
+            n_generations=8, seed=0)
+STAGE = dict(n_train=28, n_qor_samples=2, pop_size=24, n_parents=12,
+             n_generations=6, seed=0)
+K_PER_STAGE = 10
+MAX_CANDIDATES = 24
+
+
+def bench_flat() -> dict:
+    from repro.service import CampaignManager, CampaignSpec
+
+    mgr = CampaignManager(eval_workers=2, campaign_workers=1)
+    t0 = time.perf_counter()
+    cid = mgr.submit(CampaignSpec(accel="smoothed_dct", **FLAT))
+    state = mgr.wait(cid, timeout=3600)
+    wall = time.perf_counter() - t0
+    assert state == "done", mgr.status(cid).get("error")
+    res = mgr.result(cid)
+    stats = mgr.scheduler.stats()
+    out = {
+        "wall_s": wall,
+        "labels": stats["labeled"],
+        "front": res.front_objectives.tolist(),
+        "n_designs": int(len(res.true_objectives)),
+    }
+    mgr.shutdown()
+    return out
+
+
+def bench_hier() -> dict:
+    from repro.accel import SmoothedDct
+    from repro.hierarchy import HierarchicalConfig, run_hierarchical
+    from repro.service import CampaignManager
+
+    mgr = CampaignManager(eval_workers=2, campaign_workers=2)
+    cfg = HierarchicalConfig(k_per_stage=K_PER_STAGE,
+                             max_candidates=MAX_CANDIDATES, **STAGE)
+    t0 = time.perf_counter()
+    res = run_hierarchical(SmoothedDct(), cfg=cfg, manager=mgr, verbose=True)
+    wall = time.perf_counter() - t0
+    out = {
+        "wall_s": wall,
+        "labels": res.ground_truth_calls["total"],
+        "labels_stage": res.ground_truth_calls["stage_campaigns"],
+        "labels_final": res.ground_truth_calls["final"],
+        "front": res.front_objectives.tolist(),
+        "n_candidates": int(len(res.candidate_genomes)),
+        "max_concurrent_stages": int(res.max_concurrent_stages),
+        "flat_space_size": float(res.flat_space_size),
+        "compose": {
+            "stage_front_sizes": res.compose_stats.stage_sizes,
+            "truncated_sizes": res.compose_stats.truncated_sizes,
+            "pairs_evaluated": res.compose_stats.pairs_evaluated,
+            "survivors": res.compose_stats.survivors,
+        },
+        "timings": {k: round(v, 3) for k, v in res.timings.items()},
+    }
+    mgr.shutdown()
+    return out
+
+
+def hypervolumes(front_a, front_b):
+    """2-D hypervolume of each front w.r.t. a shared reference point."""
+    from repro.core.pareto import hypervolume_2d
+
+    both = np.concatenate([np.asarray(front_a), np.asarray(front_b)])
+    ref = both.max(axis=0) + 0.05 * np.abs(both.max(axis=0) -
+                                           both.min(axis=0)) + 1e-12
+    return (hypervolume_2d(np.asarray(front_a), ref),
+            hypervolume_2d(np.asarray(front_b), ref),
+            ref.tolist())
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_hierarchy.json"))
+    args = ap.parse_args()
+    report = {"spec": {"flat": FLAT, "stage": STAGE,
+                       "k_per_stage": K_PER_STAGE,
+                       "max_candidates": MAX_CANDIDATES}}
+
+    section("flat joint-genome campaign (45-slot genome)")
+    flat = bench_flat()
+    emit("hierarchy.flat_wall", flat["wall_s"] * 1e6,
+         f"labels={flat['labels']}")
+    report["flat"] = flat
+
+    section("hierarchical: per-stage campaigns -> compose -> verify")
+    hier = bench_hier()
+    emit("hierarchy.hier_wall", hier["wall_s"] * 1e6,
+         f"labels={hier['labels']}")
+    emit("hierarchy.concurrent_stages",
+         float(hier["max_concurrent_stages"]),
+         f"{hier['max_concurrent_stages']} stages in flight")
+    report["hierarchical"] = hier
+
+    hv_flat, hv_hier, ref = hypervolumes(flat["front"], hier["front"])
+    label_ratio = hier["labels"] / max(flat["labels"], 1)
+    hv_ratio = hv_hier / max(hv_flat, 1e-300)
+    emit("hierarchy.label_ratio", label_ratio * 1e6,
+         f"{label_ratio:.2f} (target <= 0.60)")
+    emit("hierarchy.hv_ratio", hv_ratio * 1e6,
+         f"{hv_ratio:.3f} (target >= 0.99)")
+    report["hypervolume"] = {"flat": hv_flat, "hier": hv_hier,
+                             "ref_point": ref, "ratio": hv_ratio}
+    report["label_ratio"] = label_ratio
+    report["wall_speedup"] = flat["wall_s"] / max(hier["wall_s"], 1e-9)
+
+    # write the report BEFORE asserting, so a failed acceptance run still
+    # leaves the measured data on disk for diagnosis
+    out_path = os.path.abspath(args.out)
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"wrote {out_path}", file=sys.stderr)
+
+    # acceptance criteria (ISSUE 2)
+    assert label_ratio <= 0.60, (
+        f"hierarchical spent {label_ratio:.2f}x of flat's labels (> 0.60)")
+    assert hv_ratio >= 0.99, (
+        f"hierarchical hypervolume ratio {hv_ratio:.3f} < 0.99")
+    assert hier["max_concurrent_stages"] >= 2, \
+        "stage campaigns did not overlap"
+
+
+if __name__ == "__main__":
+    main()

@@ -6,6 +6,8 @@ Walks the three framework stages (Fig. 2): label a training sample with
 XLA 'synthesis' + behavioral simulation, train the two surrogates (Random
 Forest for QoR, Bayesian Ridge for energy), explore with NSGA-II, then
 re-synthesize the survivors and print the true Pareto front.
+
+Set REPRO_SMOKE=1 for the CI-sized fast mode.
 """
 
 import sys
@@ -20,6 +22,8 @@ from repro.core.acl.library import default_library
 from repro.core.dse import DSEConfig, run_dse
 from repro.core.nsga2 import NSGA2Config
 
+SMOKE = bool(os.environ.get("REPRO_SMOKE"))
+
 
 def main():
     lib = default_library()
@@ -31,8 +35,11 @@ def main():
 
     cfg = DSEConfig(
         pipeline="D",                      # the paper's winning pipeline
-        n_train=80,                        # paper: 1000 (reduced here)
-        nsga=NSGA2Config(pop_size=48, n_parents=16, n_generations=10),
+        n_train=16 if SMOKE else 80,       # paper: 1000 (reduced here)
+        n_qor_samples=2 if SMOKE else 4,
+        nsga=NSGA2Config(pop_size=8 if SMOKE else 48,
+                         n_parents=4 if SMOKE else 16,
+                         n_generations=2 if SMOKE else 10),
     )
     res = run_dse(accel, lib, cfg, verbose=True)
 

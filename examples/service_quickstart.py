@@ -6,7 +6,9 @@ Submits two concurrent campaigns for the HEVC MCM2 accelerator to an
 in-process CampaignManager backed by a persistent label store, then
 re-submits one against the warm store.  Watch the label accounting: the
 second concurrent campaign rides the first's in-flight synthesis, and
-the warm rerun performs zero ground-truth labeling."""
+the warm rerun performs zero ground-truth labeling.
+
+Set REPRO_SMOKE=1 for the CI-sized fast mode."""
 
 import os
 import sys
@@ -18,12 +20,17 @@ import numpy as np
 
 from repro.service import CampaignManager, CampaignSpec, JsonlLabelStore
 
+SMOKE = bool(os.environ.get("REPRO_SMOKE"))
+
 
 def main():
     store_path = os.path.join(tempfile.mkdtemp(prefix="svc_demo_"),
                               "labels.jsonl")
-    spec = CampaignSpec(accel="mcm2", n_train=48, n_qor_samples=2,
-                        pop_size=16, n_parents=8, n_generations=4)
+    spec = CampaignSpec(accel="mcm2",
+                        n_train=10 if SMOKE else 48, n_qor_samples=2,
+                        pop_size=8 if SMOKE else 16,
+                        n_parents=4 if SMOKE else 8,
+                        n_generations=2 if SMOKE else 4)
 
     print(f"label store: {store_path}")
     store = JsonlLabelStore(store_path)

@@ -4,5 +4,16 @@ from .hevc_dct import HEVCDct, MCMAccelerator
 
 __all__ = [
     "Accelerator", "Slot", "RANK_CHOICES",
-    "GaussianFilter", "HEVCDct", "MCMAccelerator",
+    "GaussianFilter", "HEVCDct", "MCMAccelerator", "SmoothedDct",
 ]
+
+
+def __getattr__(name):
+    # lazy: smoothed_dct subclasses repro.hierarchy.StagedPipeline, which
+    # itself imports accel.base — a top-level import here would turn that
+    # into a cycle whenever repro.hierarchy is imported first
+    if name == "SmoothedDct":
+        from .smoothed_dct import SmoothedDct
+
+        return SmoothedDct
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -25,7 +25,14 @@ from .store import (
     label_key,
 )
 from .scheduler import EvalScheduler
-from .campaigns import CampaignManager, CampaignSpec, make_accelerator
+from .campaigns import (
+    CampaignManager,
+    CampaignSpec,
+    HierarchicalSpec,
+    make_accelerator,
+    register_accelerator,
+    unregister_accelerator,
+)
 
 __all__ = [
     "EvalContext",
@@ -36,5 +43,8 @@ __all__ = [
     "EvalScheduler",
     "CampaignManager",
     "CampaignSpec",
+    "HierarchicalSpec",
     "make_accelerator",
+    "register_accelerator",
+    "unregister_accelerator",
 ]

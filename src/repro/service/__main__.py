@@ -27,6 +27,9 @@ def main(argv=None):
                     help="ground-truth labeling worker threads")
     ap.add_argument("--campaign-workers", type=int, default=2,
                     help="concurrently running campaigns")
+    ap.add_argument("--hier-workers", type=int, default=1,
+                    help="concurrently running hierarchical jobs (their "
+                         "per-stage campaigns use the campaign workers)")
     ap.add_argument("--max-batch", type=int, default=32,
                     help="max label requests coalesced per batch")
     ap.add_argument("--max-wait-ms", type=float, default=20.0,
@@ -40,6 +43,7 @@ def main(argv=None):
         store,
         eval_workers=args.eval_workers,
         campaign_workers=args.campaign_workers,
+        hier_workers=args.hier_workers,
         max_batch=args.max_batch,
         max_wait_s=args.max_wait_ms / 1e3,
     )

@@ -3,6 +3,11 @@
 Endpoints (JSON in/out):
 
     POST /campaigns              {spec fields}        -> {"id": ...}
+                                 with {"hierarchical": true, "accel":
+                                 <staged pipeline>, "stages": [...]} the
+                                 job runs the hierarchical search (one
+                                 concurrent campaign per stage, composed
+                                 + end-to-end verified front)
     GET  /campaigns              -> [{id, state, accel}, ...]
     GET  /campaigns/<id>         -> status record
     GET  /campaigns/<id>/result  -> summary (val_pcc, timings, front size)
@@ -25,7 +30,7 @@ import urllib.request
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Dict, Optional, Tuple
 
-from .campaigns import CampaignManager, CampaignSpec
+from .campaigns import CampaignManager, CampaignSpec, HierarchicalSpec
 
 __all__ = ["make_server", "serve", "Client"]
 
@@ -110,11 +115,19 @@ class _Handler(BaseHTTPRequestHandler):
         try:
             n = int(self.headers.get("Content-Length", 0))
             payload = json.loads(self.rfile.read(n) or b"{}")
-            spec = CampaignSpec.from_dict(payload)
+            if not isinstance(payload, dict):
+                raise ValueError("campaign spec must be a JSON object")
+            # submit() validates the spec (unknown accelerator, malformed
+            # sizes) and raises ValueError -> 400 here, instead of the
+            # campaign failing asynchronously in a worker thread
+            if payload.get("hierarchical"):
+                spec = HierarchicalSpec.from_dict(payload)
+                cid = self.manager.submit_hierarchical(spec)
+            else:
+                spec = CampaignSpec.from_dict(payload)
+                cid = self.manager.submit(spec)
         except (json.JSONDecodeError, TypeError, ValueError) as exc:
             return self._error(400, f"bad campaign spec: {exc}")
-        try:
-            cid = self.manager.submit(spec)
         except Exception as exc:  # noqa: BLE001 - JSON 500 over a torn socket
             return self._error(500, f"{type(exc).__name__}: {exc}")
         self._send({"id": cid, "state": "queued"}, 202)
@@ -163,6 +176,9 @@ class Client:
 
     def submit(self, **spec) -> str:
         return self._req("/campaigns", spec)["id"]
+
+    def submit_hierarchical(self, **spec) -> str:
+        return self._req("/campaigns", {**spec, "hierarchical": True})["id"]
 
     def status(self, cid: str) -> Dict:
         return self._req(f"/campaigns/{cid}")

@@ -39,21 +39,64 @@ from .store import EvalContext, InMemoryLabelStore, LabelStore
 
 __all__ = [
     "CampaignSpec",
+    "HierarchicalSpec",
     "CampaignManager",
     "SurrogateRegistry",
     "make_accelerator",
+    "register_accelerator",
+    "unregister_accelerator",
 ]
+
+# extension point: custom accelerator factories by name (used by
+# repro.hierarchy to make ad-hoc pipelines resolvable by the campaign
+# workers; also handy for tests)
+_REGISTRY: Dict[str, callable] = {}
+
+
+def register_accelerator(name: str, factory) -> None:
+    """Register a zero-arg factory so ``make_accelerator(name)`` (and
+    hence campaign specs) can resolve a custom accelerator.  The entry
+    lives for the process (run_hierarchical relies on the name staying
+    resolvable for its stage campaigns); reclaim retired names with
+    ``unregister_accelerator``."""
+    _REGISTRY[name] = factory
+
+
+def unregister_accelerator(name: str) -> bool:
+    """Drop a registered factory (no-op on unknown names).  Only do this
+    once no in-flight campaign still resolves the name."""
+    return _REGISTRY.pop(name, None) is not None
 
 
 def make_accelerator(name: str):
     """Accelerator factory for service requests.
 
-    ``mcm1``..``mcm4`` (HEVC DCT rows), ``hevc_dct4x4``, ``gaussian3x3``
-    and ``lm:<arch>`` (e.g. ``lm:granite-8b``)."""
+    ``mcm1``..``mcm4`` (HEVC DCT rows), ``hevc_dct4x4``, ``gaussian3x3``,
+    ``smoothed_dct`` (the staged Gaussian->DCT pipeline),
+    ``<pipeline>/stage<i>`` (one stage of a staged pipeline, QoR in situ)
+    and ``lm:<arch>`` (e.g. ``lm:granite-8b``).  Names registered via
+    ``register_accelerator`` take precedence."""
+    if name in _REGISTRY:
+        return _REGISTRY[name]()
+    if "/stage" in name:
+        base, _, idx = name.rpartition("/stage")
+        pipe = make_accelerator(base)
+        if not hasattr(pipe, "stage_views"):
+            raise ValueError(f"{base!r} is not a staged pipeline")
+        views = pipe.stage_views()
+        if not idx.isdigit() or int(idx) >= len(views):
+            raise ValueError(
+                f"unknown stage {name!r}: {base!r} has stages "
+                f"0..{len(views) - 1}"
+            )
+        return views[int(idx)]
     from ..accel import GaussianFilter, HEVCDct, MCMAccelerator
 
     if name.startswith("mcm"):
-        row = int(name[3:]) - 1
+        try:
+            row = int(name[3:]) - 1
+        except ValueError:
+            raise ValueError(f"unknown accelerator {name!r}") from None
         if not 0 <= row < 4:
             raise ValueError(f"unknown MCM accelerator {name!r}")
         return MCMAccelerator(row)
@@ -61,11 +104,20 @@ def make_accelerator(name: str):
         return HEVCDct()
     if name == "gaussian3x3":
         return GaussianFilter()
+    if name == "smoothed_dct":
+        from ..accel.smoothed_dct import SmoothedDct
+
+        return SmoothedDct()
     if name.startswith("lm:"):
         from ..accel.lm import LMAccelerator
         from ..configs import get_config
 
-        return LMAccelerator(get_config(name[3:]))
+        try:
+            config = get_config(name[3:])
+        except KeyError as exc:
+            # ValueError is the factory's contract (-> HTTP 400)
+            raise ValueError(f"unknown accelerator {name!r}: {exc}") from exc
+        return LMAccelerator(config)
     raise ValueError(f"unknown accelerator {name!r}")
 
 
@@ -95,6 +147,13 @@ class CampaignSpec:
                 f"got {self.warm_surrogates!r}"
             )
 
+    def validate(self) -> None:
+        """Submit-time validation: reject unknown accelerators and
+        malformed sizes with a ValueError (HTTP 400) instead of letting
+        the campaign fail asynchronously in a worker thread."""
+        _validate_sizes(self)
+        make_accelerator(self.accel)  # raises ValueError if unknown
+
     def dse_config(self) -> DSEConfig:
         return DSEConfig(
             pipeline=self.pipeline,
@@ -117,8 +176,123 @@ class CampaignSpec:
     @classmethod
     def from_dict(cls, d: Dict) -> "CampaignSpec":
         d = dict(d)
+        d.pop("hierarchical", None)   # an explicit false is still valid
         if "objectives" in d:
             d["objectives"] = tuple(d["objectives"])
+        return cls(**d)
+
+
+def _validate_sizes(spec) -> None:
+    """Shared size/objective sanity checks for campaign-like specs."""
+    from .store import LABEL_KEYS
+
+    for name in ("n_train", "n_qor_samples", "pop_size", "n_parents"):
+        v = getattr(spec, name)
+        if not isinstance(v, int) or v <= 0:
+            raise ValueError(f"{name} must be a positive integer, got {v!r}")
+    if not isinstance(spec.n_generations, int) or spec.n_generations < 0:
+        raise ValueError(
+            f"n_generations must be a non-negative integer, "
+            f"got {spec.n_generations!r}"
+        )
+    if spec.n_parents > spec.pop_size:
+        raise ValueError(
+            f"n_parents ({spec.n_parents}) cannot exceed pop_size "
+            f"({spec.pop_size})"
+        )
+    objs = tuple(spec.objectives)
+    if not objs:
+        raise ValueError("objectives cannot be empty")
+    unknown = sorted(set(objs) - set(LABEL_KEYS))
+    if unknown:
+        raise ValueError(
+            f"unknown objectives {unknown}; known: {sorted(LABEL_KEYS)}"
+        )
+
+
+@dataclass(frozen=True)
+class HierarchicalSpec:
+    """A serializable hierarchical-search request: per-stage campaign
+    budget + composition knobs over a staged pipeline accelerator
+    (``POST /campaigns`` with ``{"hierarchical": true, ...}``)."""
+
+    accel: str = "smoothed_dct"
+    stages: Tuple[Dict, ...] = ()     # optional per-stage spec overrides
+    pipeline: str = "D"
+    qor_model: str = "random_forest"
+    hw_model: str = "bayesian_ridge"
+    objectives: Tuple[str, ...] = ("qor", "energy")
+    n_train: int = 48
+    n_qor_samples: int = 2
+    rank_genes: bool = False
+    warm_start: bool = True
+    pop_size: int = 24
+    n_parents: int = 12
+    n_generations: int = 6
+    seed: int = 0
+    k_per_stage: Optional[int] = 12
+    max_candidates: int = 64
+
+    def validate(self) -> None:
+        _validate_sizes(self)
+        if self.max_candidates <= 0:
+            raise ValueError("max_candidates must be positive")
+        if self.k_per_stage is not None and self.k_per_stage <= 0:
+            raise ValueError("k_per_stage must be positive or null")
+        accel = make_accelerator(self.accel)
+        if not hasattr(accel, "stage_views"):
+            raise ValueError(
+                f"{self.accel!r} is not a staged pipeline (hierarchical "
+                f"search needs stages)"
+            )
+        n_stages = len(accel.stages)
+        if self.stages and len(self.stages) != n_stages:
+            raise ValueError(
+                f"stages has {len(self.stages)} override entries; "
+                f"{self.accel!r} has {n_stages} stages"
+            )
+        # validate the overridden per-stage specs too, so a bad override
+        # is a 400 at submit, not an async failure in the hier worker
+        cfg = self.hier_config()
+        for i in range(n_stages):
+            try:
+                spec = cfg.stage_spec(
+                    f"{self.accel}/stage{i}",
+                    self.stages[i] if self.stages else None,
+                )
+            except TypeError as exc:
+                raise ValueError(f"bad stage {i} override: {exc}") from exc
+            try:
+                spec.validate()
+            except ValueError as exc:
+                raise ValueError(f"bad stage {i} spec: {exc}") from exc
+
+    def hier_config(self):
+        # field-name intersection, so a knob added to both dataclasses
+        # flows through without a hand-maintained copy list
+        import dataclasses
+
+        from ..hierarchy.search import HierarchicalConfig
+
+        names = {f.name for f in dataclasses.fields(HierarchicalConfig)}
+        d = {f.name: getattr(self, f.name)
+             for f in dataclasses.fields(self) if f.name in names}
+        d["objectives"] = tuple(self.objectives)
+        return HierarchicalConfig(**d)
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "HierarchicalSpec":
+        d = dict(d)
+        d.pop("hierarchical", None)
+        if "objectives" in d:
+            d["objectives"] = tuple(d["objectives"])
+        if "stages" in d:
+            stages = d["stages"]
+            if not isinstance(stages, (list, tuple)) or not all(
+                isinstance(s, dict) for s in stages
+            ):
+                raise ValueError("stages must be a list of override objects")
+            d["stages"] = tuple(dict(s) for s in stages)
         return cls(**d)
 
 
@@ -213,7 +387,8 @@ class SurrogateRegistry:
 @dataclass
 class _Campaign:
     id: str
-    spec: CampaignSpec
+    spec: object                     # CampaignSpec | HierarchicalSpec
+    kind: str = "dse"                # dse | hierarchical
     state: str = "queued"            # queued | running | done | failed
     submitted_at: float = field(default_factory=time.time)
     started_at: Optional[float] = None
@@ -224,9 +399,10 @@ class _Campaign:
 
 
 class _CompactResult:
-    """What remains of a DSEResult after retention compaction: the
+    """What remains of a campaign result after retention compaction: the
     Pareto front and summary stats; the heavy train/search arrays
-    (train genomes/labels, full NSGA-II population) are dropped."""
+    (train genomes/labels, full NSGA-II population, stage fronts and
+    candidate labels for hierarchical jobs) are dropped."""
 
     def __init__(self, res):
         self.accel_name = res.accel_name
@@ -238,6 +414,11 @@ class _CompactResult:
         self.true_objectives = self.front_objectives
         self.front_mask = np.ones(len(self.front_genomes), dtype=bool)
         self.n_designs = int(len(res.true_objectives))
+        # hierarchical summary fields (status() reads them off the result)
+        for attr in ("stage_campaign_ids", "ground_truth_calls",
+                     "flat_space_size", "max_concurrent_stages"):
+            if hasattr(res, attr):
+                setattr(self, attr, getattr(res, attr))
 
 
 class CampaignManager:
@@ -252,6 +433,7 @@ class CampaignManager:
         scheduler: Optional[EvalScheduler] = None,
         eval_workers: int = 2,
         campaign_workers: int = 2,
+        hier_workers: int = 1,
         max_batch: int = 32,
         max_wait_s: float = 0.02,
         keep_results: int = 128,
@@ -266,6 +448,11 @@ class CampaignManager:
         self._pool = ThreadPoolExecutor(
             campaign_workers, thread_name_prefix="campaign"
         )
+        # hierarchical jobs wait on campaigns they submit to _pool, so
+        # they get their own (small) pool to rule out self-deadlock
+        self._hier_pool = ThreadPoolExecutor(
+            max(1, hier_workers), thread_name_prefix="hier"
+        )
         self._lock = threading.Lock()
         self._campaigns: Dict[str, _Campaign] = {}
         self._seq = 0
@@ -276,17 +463,33 @@ class CampaignManager:
         self.keep_campaigns = int(keep_campaigns)
 
     # ------------------------------------------------------------------
-    def submit(self, spec: CampaignSpec) -> str:
+    def _admit(self, spec, kind: str) -> _Campaign:
+        """Validate, record and return a new campaign (raises ValueError
+        on a bad spec BEFORE any worker thread is involved)."""
+        spec.validate()
         # pick up labels other processes appended to a shared store file
         if hasattr(self.store, "refresh"):
             self.store.refresh()
         with self._lock:
             self._seq += 1
             cid = f"c{self._seq:04d}-{uuid.uuid4().hex[:6]}"
-            c = _Campaign(id=cid, spec=spec)
+            c = _Campaign(id=cid, spec=spec, kind=kind)
             self._campaigns[cid] = c
+        return c
+
+    def submit(self, spec: CampaignSpec) -> str:
+        c = self._admit(spec, "dse")
         self._pool.submit(self._run, c)
-        return cid
+        return c.id
+
+    def submit_hierarchical(self, spec: HierarchicalSpec) -> str:
+        """Run a hierarchical search as a service job.  The job itself
+        occupies a dedicated small pool — its per-stage campaigns go
+        through the regular campaign pool, so a hierarchical job can
+        never deadlock waiting on workers it is itself occupying."""
+        c = self._admit(spec, "hierarchical")
+        self._hier_pool.submit(self._run_hier, c)
+        return c.id
 
     def _run(self, c: _Campaign) -> None:
         c.state = "running"
@@ -320,6 +523,27 @@ class CampaignManager:
             c.done_evt.set()
             self._evict()
 
+    def _run_hier(self, c: _Campaign) -> None:
+        c.state = "running"
+        c.started_at = time.time()
+        try:
+            from ..hierarchy.search import run_hierarchical
+
+            spec = c.spec
+            pipeline = make_accelerator(spec.accel)
+            c.result = run_hierarchical(
+                pipeline, cfg=spec.hier_config(), manager=self,
+                stage_overrides=spec.stages or None,
+            )
+            c.state = "done"
+        except Exception as exc:  # noqa: BLE001 - campaign isolation
+            c.state = "failed"
+            c.error = f"{type(exc).__name__}: {exc}"
+        finally:
+            c.finished_at = time.time()
+            c.done_evt.set()
+            self._evict()
+
     def _evict(self) -> None:
         """Bound retention: compact old finished campaigns to their
         fronts, drop the very oldest records (and their scheduler
@@ -337,7 +561,8 @@ class CampaignManager:
                 dropped.append(c.id)
             for c in finished[n_drop:max(0, len(finished)
                                          - self.keep_results)]:
-                if isinstance(c.result, DSEResult):
+                if c.result is not None and not isinstance(c.result,
+                                                           _CompactResult):
                     c.result = _CompactResult(c.result)
         for cid in dropped:
             self.scheduler.forget_campaign(cid)
@@ -359,6 +584,7 @@ class CampaignManager:
         out = {
             "id": c.id,
             "state": c.state,
+            "kind": c.kind,
             "spec": {**asdict(c.spec),
                      "objectives": list(c.spec.objectives)},
             "submitted_at": c.submitted_at,
@@ -378,11 +604,18 @@ class CampaignManager:
             out["val_pcc"] = c.result.val_pcc
             out["timings"] = c.result.timings
             out["front_size"] = int(c.result.front_mask.sum())
+            if c.kind == "hierarchical":
+                out["stage_campaigns"] = list(c.result.stage_campaign_ids)
+                out["ground_truth_calls"] = dict(c.result.ground_truth_calls)
+                out["flat_space_size"] = float(c.result.flat_space_size)
+                out["max_concurrent_stages"] = int(
+                    c.result.max_concurrent_stages)
         return out
 
     def list_campaigns(self) -> List[Dict]:
         with self._lock:
-            return [{"id": c.id, "state": c.state, "accel": c.spec.accel}
+            return [{"id": c.id, "state": c.state, "kind": c.kind,
+                     "accel": c.spec.accel}
                     for c in self._campaigns.values()]
 
     def result(self, cid: str) -> DSEResult:
@@ -460,5 +693,6 @@ class CampaignManager:
         }
 
     def shutdown(self, *, wait: bool = True) -> None:
+        self._hier_pool.shutdown(wait=wait)
         self._pool.shutdown(wait=wait)
         self.scheduler.shutdown(wait=wait)

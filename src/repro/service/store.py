@@ -247,17 +247,33 @@ class JsonlLabelStore(LabelStore):
     Appends are flushed per batch; a fresh process replays the file into
     its index at construction, so labels persist across campaigns AND
     processes.  Duplicate keys are benign (last write wins on replay —
-    labels are deterministic, so duplicates carry identical values)."""
+    labels are deterministic, so duplicates carry identical values).
 
-    def __init__(self, path: str):
+    Duplicates DO accumulate when several processes label overlapping
+    genome sets against one file, making replay O(lines) instead of
+    O(unique labels).  ``compact()`` rewrites the log with one line per
+    key; ``auto_compact_ratio=r`` (opt-in) compacts automatically
+    whenever the file holds more than ``r``x as many lines as unique
+    keys.  Compaction assumes no OTHER process is appending at that
+    moment: concurrent writers keep a handle to the replaced inode and
+    their appends would be lost — run it from the store's owning process
+    (the service) or during maintenance."""
+
+    def __init__(self, path: str, *, auto_compact_ratio: Optional[float] = None):
         super().__init__()
+        if auto_compact_ratio is not None and auto_compact_ratio <= 1.0:
+            raise ValueError("auto_compact_ratio must be > 1")
         self.path = str(path)
+        self.auto_compact_ratio = auto_compact_ratio
+        self.compactions = 0
         self._data: Dict[str, Dict[str, float]] = {}
         self._offset = 0  # bytes already replayed; refresh parses the tail
+        self._n_lines = 0  # complete lines in the file (incl. duplicates)
         os.makedirs(os.path.dirname(os.path.abspath(self.path)), exist_ok=True)
-        self._replay()
-        # line-buffered append handle; opened lazily on first put
+        # append handle; opened lazily on first put
         self._fh = None
+        self._replay()
+        self._maybe_auto_compact()
 
     def _replay(self) -> None:
         """Parse records appended since the last replay (tail-seek, so a
@@ -274,6 +290,7 @@ class JsonlLabelStore(LabelStore):
                     # leave the offset here so it is re-read next time
                     self._offset = pos
                     return
+                self._n_lines += 1
                 try:
                     rec = json.loads(line)
                     self._data[rec["k"]] = rec["l"]
@@ -285,8 +302,43 @@ class JsonlLabelStore(LabelStore):
         Returns the number of entries after the refresh."""
         with self._lock:
             self._replay()
+            self._maybe_auto_compact()
             return len(self._data)
 
+    # --- compaction ---------------------------------------------------
+    def compact(self) -> int:
+        """Rewrite the log with one line per unique key (atomic rename).
+        Returns the number of duplicate/malformed lines dropped."""
+        with self._lock:
+            return self._compact_locked()
+
+    def _compact_locked(self) -> int:
+        dropped = max(self._n_lines - len(self._data), 0)
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+        tmp = self.path + ".compact.tmp"
+        with open(tmp, "w") as f:
+            now = time.time()
+            for k, rec in self._data.items():
+                f.write(json.dumps({"k": k, "l": rec, "t": now},
+                                   sort_keys=True) + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self.path)
+        self._offset = os.path.getsize(self.path)
+        self._n_lines = len(self._data)
+        self.compactions += 1
+        return dropped
+
+    def _maybe_auto_compact(self) -> None:
+        r = self.auto_compact_ratio
+        if r is None or self._n_lines <= len(self._data):
+            return
+        if self._n_lines >= r * max(len(self._data), 1):
+            self._compact_locked()
+
+    # ------------------------------------------------------------------
     def _get(self, key):
         return self._data.get(key)
 
@@ -297,12 +349,26 @@ class JsonlLabelStore(LabelStore):
             return  # labels are deterministic: skip the duplicate append
         if self._fh is None:
             self._fh = open(self.path, "a")
+        # consume any foreign tail BEFORE appending, so advancing the
+        # offset below cannot skip another process's records; advancing
+        # it keeps our own append from being re-replayed (and re-counted)
+        # by the next refresh
+        self._replay()
         self._fh.write(json.dumps({"k": key, "l": rec, "t": time.time()},
                                   sort_keys=True) + "\n")
         self._fh.flush()
+        self._n_lines += 1
+        self._offset = self._fh.tell()
 
     def _len(self):
         return len(self._data)
+
+    def stats(self) -> Dict[str, float]:
+        s = super().stats()
+        with self._lock:
+            s["lines"] = self._n_lines
+            s["compactions"] = self.compactions
+        return s
 
     def close(self) -> None:
         with self._lock:

@@ -1,0 +1,375 @@
+"""Hierarchical search subsystem: staged pipelines (chained behavioral
+sim, genome plumbing, in-situ stage views), front composition (incremental
+pruning == brute force), run_hierarchical and its service integration."""
+
+import itertools
+import json
+import threading
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.accel import GaussianFilter, HEVCDct, SmoothedDct
+from repro.core.acl.library import default_library
+from repro.core.pareto import non_dominated_mask
+from repro.hierarchy import (
+    HierarchicalConfig,
+    StageFront,
+    StageView,
+    compose_fronts,
+    run_hierarchical,
+    truncate_front,
+)
+from repro.hierarchy.compose import _combine, compose_qor
+from repro.service import (
+    CampaignManager,
+    HierarchicalSpec,
+    make_accelerator,
+)
+
+LIB = default_library()
+
+TINY = dict(n_train=8, n_qor_samples=2, pop_size=8, n_parents=4,
+            n_generations=1)
+
+
+@pytest.fixture(scope="module")
+def pipe():
+    return SmoothedDct()
+
+
+@pytest.fixture(scope="module")
+def images(pipe):
+    return pipe.sample_inputs(2, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# StagedPipeline behavior
+# ---------------------------------------------------------------------------
+
+def test_staged_exact_is_bit_identical_to_hand_chain(pipe, images):
+    """All-exact pipeline sim == chaining the stage sims by hand."""
+    circuits, _ = pipe.decode(pipe.exact_genome(LIB), LIB)
+    out = pipe.simulate(circuits, images)
+    gauss, dct = GaussianFilter(), HEVCDct()
+    smoothed = np.clip(gauss.exact_output(images), 0, 255)
+    hand = dct.exact_output(smoothed)
+    assert np.array_equal(out, hand)
+    assert np.array_equal(pipe.exact_output(images), hand)
+    assert pipe.qor(circuits, images) == 100.0
+
+
+def test_staged_approx_matches_hand_chain(pipe, images):
+    """Arbitrary genome: the pipeline chains the stage sims + coupling."""
+    rng = np.random.default_rng(3)
+    g = rng.integers(0, pipe.gene_sizes(LIB))
+    circuits, _ = pipe.decode(g, LIB)
+    out = pipe.simulate(circuits, images)
+
+    gauss, dct = GaussianFilter(), HEVCDct()
+    per_stage = pipe.split_circuits(circuits)
+    smoothed = np.clip(gauss.simulate(per_stage[0], images), 0, 255)
+    hand = dct.simulate(per_stage[1], smoothed)
+    assert np.array_equal(out, hand)
+
+
+def test_staged_slot_concat_and_genome_roundtrip(pipe):
+    assert len(pipe.slots) == 17 + 28
+    assert len(pipe.mul_slot_indices()) == 9 + 16
+    assert len(pipe.mul_slot_constants()) == 25
+    rng = np.random.default_rng(0)
+    for rank_genes in (False, True):
+        sizes = pipe.gene_sizes(LIB, rank_genes=rank_genes)
+        g = rng.integers(0, sizes)
+        parts = pipe.split_genome(g, rank_genes=rank_genes)
+        assert len(parts) == 2
+        back = pipe.assemble_genome(parts, rank_genes=rank_genes)
+        assert np.array_equal(g, back)
+        # per-stage genomes decode in each stage's own convention
+        for view, part in zip(pipe.stage_views(), parts):
+            assert len(part) == len(view.gene_sizes(LIB,
+                                                    rank_genes=rank_genes))
+
+
+def test_stage_view_measures_in_situ(pipe, images):
+    """A stage view's sim == the pipeline with every other stage exact."""
+    rng = np.random.default_rng(5)
+    view = StageView(pipe, 1)
+    g1 = rng.integers(0, view.gene_sizes(LIB))
+    circuits, _ = view.decode(g1, LIB)
+    out = view.simulate(circuits, images)
+
+    # hand version: exact gaussian -> coupling -> approx dct
+    smoothed = np.clip(GaussianFilter().exact_output(images), 0, 255)
+    hand = HEVCDct().simulate(circuits, smoothed)
+    assert np.array_equal(out, hand)
+    # exact stage genome in situ is exact end-to-end
+    exact, _ = view.decode(view.exact_genome(LIB), LIB)
+    assert view.qor(exact, images) == 100.0
+
+
+def test_stage_views_resolve_by_name():
+    v0 = make_accelerator("smoothed_dct/stage0")
+    v1 = make_accelerator("smoothed_dct/stage1")
+    assert isinstance(v0, StageView) and v0.stage.name == "gaussian3x3"
+    assert isinstance(v1, StageView) and v1.stage.name == "hevc_dct4x4"
+    with pytest.raises(ValueError):
+        make_accelerator("smoothed_dct/stage7")
+    with pytest.raises(ValueError):
+        make_accelerator("smoothed_dct/stage-1")   # no negative indexing
+    with pytest.raises(ValueError):
+        make_accelerator("mcm2/stage0")
+    with pytest.raises(ValueError):                # KeyError -> ValueError
+        make_accelerator("lm:nope-such-arch")
+
+
+def test_run_hierarchical_reregisters_edited_pipeline():
+    """If a name resolves to a DIFFERENT structure (pipeline edited and
+    re-run in a live process), run_hierarchical re-registers its own
+    object — stage campaigns and end-to-end verification must agree."""
+    from repro.hierarchy.staged import StagedPipeline
+    from repro.service import unregister_accelerator
+
+    edited = StagedPipeline("smoothed_dct", [GaussianFilter()])
+    try:
+        cfg = HierarchicalConfig(k_per_stage=3, max_candidates=4, **TINY)
+        res = run_hierarchical(edited, LIB, cfg)
+        # the campaigns ran on the single-stage edit, not the builtin
+        assert len(res.stage_campaign_ids) == 1
+        assert res.candidate_genomes.shape[1] == len(edited.slots) == 17
+        assert len(res.front_objectives) > 0
+        assert make_accelerator("smoothed_dct").label_fingerprint() \
+            == edited.label_fingerprint()
+    finally:
+        unregister_accelerator("smoothed_dct")   # restore the builtin
+    assert len(make_accelerator("smoothed_dct").stages) == 2
+
+
+# ---------------------------------------------------------------------------
+# composition
+# ---------------------------------------------------------------------------
+
+def _random_fronts(rng, n_stages, m, qor_index):
+    fronts = []
+    for _ in range(n_stages):
+        n = int(rng.integers(3, 7))
+        obj = rng.normal(size=(n, m))
+        if qor_index is not None:
+            # -psnr values in a realistic range
+            obj[:, qor_index] = -rng.uniform(5, 100, size=n)
+        fronts.append(StageFront(genomes=np.arange(n)[:, None],
+                                 objectives=obj))
+    return fronts
+
+
+def _brute_force(fronts, qor_index):
+    """Full cross-product (same combine op, left fold, NO pruning)."""
+    objs = fronts[0].objectives.astype(np.float64)
+    for f in fronts[1:]:
+        objs = _combine(objs, f.objectives.astype(np.float64), qor_index)
+    return objs[non_dominated_mask(objs)]
+
+
+@pytest.mark.parametrize("n_stages,m,qor_index", [
+    (2, 2, 0), (3, 2, 0), (2, 3, 1), (3, 3, None),
+])
+def test_compose_equals_bruteforce(n_stages, m, qor_index):
+    """Property: incremental non-dominated pruning yields exactly the
+    brute-force cross-product front (no caps applied)."""
+    for seed in range(6):
+        rng = np.random.default_rng(100 * seed + n_stages)
+        fronts = _random_fronts(rng, n_stages, m, qor_index)
+        res = compose_fronts(fronts, qor_index=qor_index)
+        brute = _brute_force(fronts, qor_index)
+        a = res.objectives[np.lexsort(res.objectives.T)]
+        b = brute[np.lexsort(brute.T)]
+        assert a.shape == b.shape, f"seed {seed}"
+        assert np.allclose(a, b), f"seed {seed}"
+        # indices reconstruct the composed objectives
+        assert res.stats.survivors == len(res.indices)
+        assert res.stats.cross_product_size == float(np.prod(
+            [len(f.objectives) for f in fronts]))
+
+
+def test_compose_qor_is_monotone_noise_addition():
+    # an exact stage (psnr 100 -> -100) barely degrades the other stage
+    assert compose_qor(np.array(-40.0), np.array(-100.0)) < -39.9
+    # two equal stages lose 10*log10(2) ~ 3 dB
+    assert np.isclose(compose_qor(np.array(-40.0), np.array(-40.0)),
+                      -40 + 10 * np.log10(2))
+    # monotone: a worse stage never improves the composition
+    a = compose_qor(np.array(-30.0), np.array(-50.0))
+    b = compose_qor(np.array(-20.0), np.array(-50.0))
+    assert b > a
+
+
+def test_truncate_front_keeps_extremes():
+    obj = np.stack([np.arange(10.0), -np.arange(10.0)], axis=1)
+    sel = truncate_front(obj, 4)
+    assert len(sel) == 4
+    assert 0 in obj[sel][:, 0] and 9 in obj[sel][:, 0]
+    assert len(truncate_front(obj, None)) == 10
+    assert len(truncate_front(obj, 20)) == 10
+
+
+def test_compose_respects_caps():
+    rng = np.random.default_rng(7)
+    fronts = _random_fronts(rng, 3, 2, 0)
+    res = compose_fronts(fronts, qor_index=0, k_per_stage=3,
+                         max_survivors=4)
+    assert all(t <= 3 for t in res.stats.truncated_sizes)
+    assert len(res.objectives) <= 4
+    # indices point into the truncated genome arrays
+    for t in range(len(res.indices)):
+        for s, gidx in enumerate(res.indices[t]):
+            assert 0 <= gidx < len(res.stage_genomes[s])
+
+
+# ---------------------------------------------------------------------------
+# run_hierarchical + service integration
+# ---------------------------------------------------------------------------
+
+def test_run_hierarchical_end_to_end(pipe):
+    cfg = HierarchicalConfig(k_per_stage=4, max_candidates=8, **TINY)
+    res = run_hierarchical(pipe, LIB, cfg)
+    assert len(res.stage_campaign_ids) == 2
+    assert len(res.front_objectives) > 0
+    # exact anchor survives end-to-end verification on the front
+    assert np.isclose(res.true_objectives[:, 0].min(), -100.0)
+    # candidates were deduped + labeled end-to-end
+    assert len(np.unique(res.candidate_genomes, axis=0)) == len(
+        res.candidate_genomes)
+    assert res.candidate_genomes.shape[1] == len(pipe.slots)
+    gt = res.ground_truth_calls
+    assert gt["total"] == gt["stage_campaigns"] + gt["final"]
+    assert 0 < gt["final"] <= len(res.candidate_genomes)
+    assert gt["total"] < res.flat_space_size
+    assert res.max_concurrent_stages >= 1
+    assert set(res.timings) >= {"stage_campaigns", "compose",
+                                "final_eval", "total", "stage0", "stage1"}
+
+
+def test_hierarchical_service_job_and_global_front():
+    mgr = CampaignManager(eval_workers=2, campaign_workers=2)
+    spec = HierarchicalSpec(accel="smoothed_dct", k_per_stage=4,
+                            max_candidates=8, **TINY)
+    cid = mgr.submit_hierarchical(spec)
+    assert mgr.wait(cid, timeout=1200) == "done"
+    st = mgr.status(cid)
+    assert st["kind"] == "hierarchical"
+    assert st["front_size"] > 0
+    assert len(st["stage_campaigns"]) == 2
+    assert st["max_concurrent_stages"] >= 1
+    assert st["ground_truth_calls"]["total"] > 0
+    fr = mgr.front(cid)
+    assert len(fr["front"]) == st["front_size"]
+    # the hierarchical front merges into the pipeline's global front
+    gf = mgr.global_front("smoothed_dct")
+    assert gf["campaigns"] == [cid]
+    # stage campaigns are ordinary campaigns on the same manager
+    kinds = {c["id"]: c["kind"] for c in mgr.list_campaigns()}
+    assert kinds[cid] == "hierarchical"
+    assert all(kinds[sc] == "dse" for sc in st["stage_campaigns"])
+    # retention compaction keeps the hierarchical summary queryable
+    from repro.service.campaigns import _CompactResult
+
+    mgr.keep_results = 0
+    mgr._evict()
+    assert isinstance(mgr.result(cid), _CompactResult)
+    st2 = mgr.status(cid)
+    assert st2["front_size"] == st["front_size"]
+    assert st2["ground_truth_calls"] == st["ground_truth_calls"]
+    assert len(mgr.front(cid)["front"]) == st["front_size"]
+    mgr.shutdown()
+
+
+def test_register_unregister_accelerator():
+    from repro.service import register_accelerator, unregister_accelerator
+
+    register_accelerator("tmp-gauss", GaussianFilter)
+    assert make_accelerator("tmp-gauss").name == "gaussian3x3"
+    assert unregister_accelerator("tmp-gauss")
+    assert not unregister_accelerator("tmp-gauss")
+    with pytest.raises(ValueError):
+        make_accelerator("tmp-gauss")
+
+
+def test_hierarchical_spec_validation():
+    mgr = CampaignManager(eval_workers=1, campaign_workers=1)
+    with pytest.raises(ValueError, match="not a staged pipeline"):
+        mgr.submit_hierarchical(HierarchicalSpec(accel="mcm2", **TINY))
+    with pytest.raises(ValueError, match="stages"):
+        mgr.submit_hierarchical(HierarchicalSpec(
+            accel="smoothed_dct", stages=({"n_train": 4},), **TINY))
+    with pytest.raises(ValueError, match="max_candidates"):
+        mgr.submit_hierarchical(HierarchicalSpec(
+            accel="smoothed_dct", max_candidates=0, **TINY))
+    # per-stage override CONTENTS are validated at submit too
+    with pytest.raises(ValueError, match="bad stage 0 spec"):
+        mgr.submit_hierarchical(HierarchicalSpec(
+            accel="smoothed_dct", stages=({"n_train": 0}, {}), **TINY))
+    with pytest.raises(ValueError, match="bad stage 1 override"):
+        mgr.submit_hierarchical(HierarchicalSpec(
+            accel="smoothed_dct", stages=({}, {"n_trian": 8}), **TINY))
+    assert mgr.list_campaigns() == []
+    mgr.shutdown()
+
+
+def test_hierarchical_final_tag_accounting_is_reclaimed(pipe):
+    """The end-to-end verification's scheduler tag must not leak
+    per-campaign accounting entries in a long-lived service."""
+    mgr = CampaignManager(eval_workers=2, campaign_workers=2)
+    cfg = HierarchicalConfig(k_per_stage=3, max_candidates=4, **TINY)
+    res = run_hierarchical(pipe, LIB, cfg, manager=mgr)
+    per = mgr.scheduler.stats()["per_campaign"]
+    assert not any(k.endswith(tuple(
+        f"final-{cid}" for cid in res.stage_campaign_ids)) for k in per)
+    assert not any("/final-" in k for k in per)
+    mgr.shutdown()
+
+
+def test_http_hierarchical_roundtrip_and_400s():
+    from repro.service.api import Client, make_server
+
+    mgr = CampaignManager(eval_workers=2, campaign_workers=2)
+    srv = make_server(mgr, port=0)
+    threading.Thread(target=srv.serve_forever, daemon=True).start()
+    try:
+        cli = Client(f"http://127.0.0.1:{srv.server_address[1]}")
+
+        def post_expect_400(payload, needle):
+            req = urllib.request.Request(
+                cli.base + "/campaigns", data=json.dumps(payload).encode(),
+                headers={"Content-Type": "application/json"}, method="POST",
+            )
+            with pytest.raises(urllib.error.HTTPError) as ei:
+                urllib.request.urlopen(req, timeout=60)
+            assert ei.value.code == 400
+            body = json.loads(ei.value.read())
+            assert needle in body["error"]
+
+        post_expect_400({"accel": "nope-such-accel"}, "unknown accelerator")
+        post_expect_400({"accel": "mcm2", "n_train": 0}, "n_train")
+        post_expect_400({"accel": "mcm2", "pop_size": 4, "n_parents": 8},
+                        "n_parents")
+        post_expect_400({"accel": "mcm2", "objectives": ["qor", "nope"]},
+                        "objectives")
+        post_expect_400({"hierarchical": True, "accel": "mcm2"},
+                        "not a staged pipeline")
+        post_expect_400({"accel": "mcm2", "no_such_field": 1}, "spec")
+
+        # an explicit "hierarchical": false is a valid flat spec
+        flat = cli._req("/campaigns",
+                        {"accel": "mcm2", "hierarchical": False, **TINY})
+        assert flat["state"] == "queued"
+
+        cid = cli.submit_hierarchical(accel="smoothed_dct", k_per_stage=4,
+                                      max_candidates=8, **TINY)
+        st = cli.wait(cid, timeout=1200)
+        assert st["state"] == "done" and st["kind"] == "hierarchical"
+        assert len(cli.front(cid)["front"]) == st["front_size"]
+    finally:
+        srv.shutdown()
+        mgr.shutdown()

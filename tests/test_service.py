@@ -98,6 +98,92 @@ def test_store_persists_across_processes(tmp_path, ctx):
     assert rec is not None and rec["qor"] > 0
 
 
+def test_store_compaction(tmp_path):
+    """compact() rewrites the log one line per unique key; replay of the
+    compacted file is O(unique labels)."""
+    import json as _json
+
+    path = str(tmp_path / "labels.jsonl")
+    rec = {k: float(i) for i, k in enumerate(LABEL_KEYS)}
+    store = JsonlLabelStore(path)
+    store.put("k1", rec)
+    store.put("k2", rec)
+    store.close()
+    # duplicates, as left by concurrent writers in other processes
+    with open(path, "a") as f:
+        for _ in range(3):
+            f.write(_json.dumps({"k": "k1", "l": rec, "t": 0.0}) + "\n")
+        f.write("not json\n")
+
+    s2 = JsonlLabelStore(path)
+    st = s2.stats()
+    assert st["lines"] == 6 and st["entries"] == 2
+    assert s2.compact() == 4                 # 3 dups + 1 malformed dropped
+    assert s2.stats()["lines"] == 2
+    assert s2.get("k1") == rec and s2.get("k2") == rec
+    with open(path) as f:
+        assert len(f.readlines()) == 2
+    # appends still work after the rewrite, and a fresh replay sees all
+    s2.put("k3", rec)
+    s2.close()
+    s3 = JsonlLabelStore(path)
+    assert len(s3) == 3 and s3.stats()["lines"] == 3
+    s3.close()
+
+
+def test_store_refresh_does_not_recount_own_writes(tmp_path):
+    """A store's own appends must not be re-replayed (and re-counted) by
+    refresh(), or auto-compaction would fire on duplicate-free files."""
+    import json as _json
+
+    path = str(tmp_path / "labels.jsonl")
+    rec = {k: 1.0 for k in LABEL_KEYS}
+    store = JsonlLabelStore(path, auto_compact_ratio=2.0)
+    for i in range(5):
+        store.put(f"k{i}", rec)
+    store.refresh()
+    s = store.stats()
+    assert s["lines"] == 5 and s["entries"] == 5
+    assert store.compactions == 0       # no spurious auto-compaction
+    assert store.compact() == 0         # nothing to drop
+    # a foreign append (another process) is still picked up
+    with open(path, "a") as f:
+        f.write(_json.dumps({"k": "kx", "l": rec, "t": 0.0}) + "\n")
+    store.refresh()
+    assert store.get("kx") == rec and store.stats()["lines"] == 6
+    store.close()
+
+
+def test_store_auto_compact(tmp_path):
+    """Opt-in threshold: replaying a file with > ratio x duplicate lines
+    triggers compaction automatically."""
+    import json as _json
+
+    path = str(tmp_path / "labels.jsonl")
+    rec = {k: 1.0 for k in LABEL_KEYS}
+    with open(path, "w") as f:
+        for _ in range(10):
+            f.write(_json.dumps({"k": "k1", "l": rec, "t": 0.0}) + "\n")
+
+    store = JsonlLabelStore(path, auto_compact_ratio=2.0)
+    assert store.compactions == 1
+    assert store.stats()["lines"] == 1 and len(store) == 1
+    with open(path) as f:
+        assert len(f.readlines()) == 1
+    store.close()
+
+    # without the opt-in, the file is left as-is
+    with open(path, "a") as f:
+        for _ in range(10):
+            f.write(_json.dumps({"k": "k1", "l": rec, "t": 0.0}) + "\n")
+    plain = JsonlLabelStore(path)
+    assert plain.compactions == 0 and plain.stats()["lines"] == 11
+    plain.close()
+
+    with pytest.raises(ValueError):
+        JsonlLabelStore(path, auto_compact_ratio=0.5)
+
+
 def test_context_fingerprint_sensitivity(ctx):
     lib = default_library()
     base = ctx.fingerprint
@@ -343,15 +429,49 @@ def test_campaign_retention_compacts_and_drops():
     mgr.shutdown()
 
 
-def test_campaign_failure_is_isolated():
+def test_submit_validates_spec_upfront():
+    """Unknown accelerators / malformed sizes are rejected at submit time
+    with a ValueError (-> HTTP 400) instead of failing asynchronously in
+    a worker thread."""
     mgr = CampaignManager(eval_workers=1, campaign_workers=1)
-    bad = CampaignSpec(accel="nope-such-accel", **SMALL)
-    cid = mgr.submit(bad)
-    assert mgr.wait(cid, timeout=60) == "failed"
-    assert "nope-such-accel" in mgr.status(cid)["error"]
-    with pytest.raises(RuntimeError):
-        mgr.result(cid)
+    with pytest.raises(ValueError, match="unknown accelerator"):
+        mgr.submit(CampaignSpec(accel="nope-such-accel", **SMALL))
+    with pytest.raises(ValueError, match="n_train"):
+        mgr.submit(CampaignSpec(accel="mcm2", **{**SMALL, "n_train": 0}))
+    with pytest.raises(ValueError, match="n_parents"):
+        mgr.submit(CampaignSpec(
+            accel="mcm2", **{**SMALL, "pop_size": 4, "n_parents": 8}))
+    with pytest.raises(ValueError, match="objectives"):
+        mgr.submit(CampaignSpec(accel="mcm2",
+                                objectives=("qor", "nope"), **SMALL))
+    assert mgr.list_campaigns() == []    # nothing was admitted
     mgr.shutdown()
+
+
+def test_campaign_failure_is_isolated():
+    """A campaign that fails at RUN time (valid spec) is isolated: it
+    lands in 'failed' with its error, without hurting the manager."""
+    from repro.accel.base import Accelerator, Slot
+    from repro.service import register_accelerator, unregister_accelerator
+
+    class _Boom(Accelerator):
+        name = "boom-accel"
+        slots = [Slot("m0", "mul8u", 1.0)]
+
+        def sample_inputs(self, n, seed=0):
+            raise RuntimeError("boom at labeling time")
+
+    register_accelerator("boom-accel", _Boom)
+    mgr = CampaignManager(eval_workers=1, campaign_workers=1)
+    try:
+        cid = mgr.submit(CampaignSpec(accel="boom-accel", **SMALL))
+        assert mgr.wait(cid, timeout=60) == "failed"
+        assert "boom" in mgr.status(cid)["error"]
+        with pytest.raises(RuntimeError):
+            mgr.result(cid)
+    finally:
+        unregister_accelerator("boom-accel")
+        mgr.shutdown()
 
 
 def test_http_api_roundtrip():
