@@ -49,9 +49,10 @@ def run(n_variants: int = 120, seed: int = 0, qor_samples: int = 2):
     cache: dict = {}
 
     def label_all():
+        # QoR rides the batched population path (one vectorized sim)
+        qor[:] = accel.qor_batch(genomes, lib, inputs)
         for t, g in enumerate(genomes):
             circuits, ranks = accel.decode(g, lib)
-            qor[t] = accel.qor(circuits, inputs)
             asic[t] = asic_cost_proxy(accel, circuits)
             tpu[t] = synth.synthesize_variant(accel, circuits, ranks,
                                               cache=cache)["energy"]

@@ -1,0 +1,95 @@
+"""Shared machinery for vectorized population ("genome-batch") simulation.
+
+The per-genome behavioral path pays a Python-level loop per slot per
+genome; the batched path makes the population the unit of work:
+
+  * multiplier slots with a constant second operand collapse to a
+    per-slot 256-entry lookup column sliced out of the circuit's
+    exhaustive product table — a population evaluates ALL slots of one
+    kind with a single ``(G, m, slots)`` advanced index into the stacked
+    ``(n_circuits, slots, 256)`` LUT,
+  * adder slots (not tabulable: 2^32 pair space) group the population by
+    the circuit chosen at each slot and apply each distinct behavioral
+    model once to the whole sub-population.
+
+Both paths are bit-exact versus looping ``simulate`` per genome: the LUT
+is the exhaustive evaluation of the same behavioral fn, and grouping
+calls the same fn on the same operand values.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from ..core.acl.library import Circuit, Library
+
+__all__ = ["mul_lut", "lut_gather", "grouped_apply"]
+
+
+# (id(library), accel-side cache key) -> (library ref, stacked LUT).
+# The library reference pins the id for the cache's lifetime; entries are
+# tiny (n_circuits x slots x 256 int64) and per-process.
+_LUT_CACHE: Dict[Tuple, Tuple[Library, np.ndarray]] = {}
+
+
+def mul_lut(
+    library: Library,
+    kind: str,
+    constants: Sequence[int],
+    *,
+    tag: str = "",
+) -> np.ndarray:
+    """(n_circuits, n_slots, 256) lookup stack for constant-operand
+    multiplier slots: ``lut[c, s, x] == circuits[c].fn(value(x),
+    constants[s])`` where ``value(x) = x`` for mul8u and ``x - 128`` for
+    mul8s (the product-table index convention)."""
+    key = (id(library), kind, tag, tuple(int(c) for c in constants))
+    hit = _LUT_CACHE.get(key)
+    if hit is not None:
+        return hit[1]
+    circuits = library.kind(kind)
+    off = 128 if kind == "mul8s" else 0
+    cols = [int(c) + off for c in constants]
+    lut = np.stack([c.table[:, cols].T for c in circuits])  # (C, S, 256)
+    _LUT_CACHE[key] = (library, lut)
+    return lut
+
+
+def lut_gather(
+    lut: np.ndarray,
+    genes: np.ndarray,
+    x_index: np.ndarray,
+    *,
+    per_genome: bool,
+) -> np.ndarray:
+    """One advanced index for every multiplier slot of one kind.
+
+    ``lut``: (n_circuits, S, 256); ``genes``: (G, S) circuit indices;
+    ``x_index``: table indices, ``(..., S)`` shared across the population
+    or ``(G, ..., S)`` per-genome.  Returns products ``(G, ..., S)``."""
+    G, S = genes.shape
+    if per_genome:
+        flat = x_index.reshape(G, -1, S)                  # (G, M, S)
+    else:
+        flat = x_index.reshape(1, -1, S)                  # (1, M, S)
+    out = lut[genes[:, None, :], np.arange(S)[None, None, :], flat]
+    mid = x_index.shape[1:-1] if per_genome else x_index.shape[:-1]
+    return out.reshape((G,) + mid + (S,))
+
+
+def grouped_apply(
+    fns: Sequence[Callable],
+    genes_col: np.ndarray,
+    a: np.ndarray,
+    b: np.ndarray,
+) -> np.ndarray:
+    """``out[g] = fns[genes_col[g]](a[g], b[g])`` — one call per DISTINCT
+    circuit over the sub-population that selected it, instead of one call
+    per genome.  ``a``/``b``: (G, ...) int64 operand stacks."""
+    out = np.empty_like(a)
+    for c in np.unique(genes_col):
+        m = genes_col == c
+        out[m] = fns[int(c)](a[m], b[m])
+    return out

@@ -42,6 +42,10 @@ class Accelerator:
 
     name: str = "base"
     slots: List[Slot] = []
+    # True when simulate()/exact_output() accept inputs with an arbitrary
+    # leading genome axis (vectorized accelerators set this; staged
+    # pipelines use it to propagate per-genome intermediates exactly)
+    batched_sim: bool = False
 
     # --- genome ---------------------------------------------------------
     def gene_sizes(self, library: Library, *, rank_genes: bool = False) -> np.ndarray:
@@ -69,6 +73,59 @@ class Accelerator:
 
     def exact_output(self, inputs: np.ndarray) -> np.ndarray:
         raise NotImplementedError
+
+    # --- population (genome-batch) behavior --------------------------------
+    def simulate_batch(
+        self,
+        genomes: np.ndarray,
+        library: Library,
+        inputs: np.ndarray,
+        *,
+        rank_genes: bool = False,
+        per_genome_inputs: bool = False,
+    ) -> np.ndarray:
+        """(G, ...) stacked behavioral outputs for a genome batch.
+
+        ``per_genome_inputs=True`` means ``inputs`` carries one input set
+        per genome on a leading axis (staged pipelines feed approximate
+        intermediates forward).  The default loops ``simulate``;
+        vectorized accelerators override with table-gather paths that are
+        bit-exact versus this loop."""
+        genomes = np.atleast_2d(np.asarray(genomes))
+        outs = []
+        for t, g in enumerate(genomes):
+            circuits, _ = self.decode(g, library, rank_genes=rank_genes)
+            x = inputs[t] if per_genome_inputs else inputs
+            outs.append(self.simulate(circuits, x))
+        return np.stack(outs)
+
+    def exact_output_batch(
+        self, inputs: np.ndarray, *, per_genome_inputs: bool = False
+    ) -> np.ndarray:
+        """Exact output over a (G, ...) per-genome input stack."""
+        if not per_genome_inputs or self.batched_sim:
+            return self.exact_output(inputs)
+        return np.stack([self.exact_output(x) for x in inputs])
+
+    def qor_batch(
+        self,
+        genomes: np.ndarray,
+        library: Library,
+        inputs: np.ndarray,
+        *,
+        rank_genes: bool = False,
+        peak: float | None = None,
+    ) -> np.ndarray:
+        """Per-genome QoR vector; the exact reference is computed ONCE
+        for the whole population and PSNR is vectorized across the
+        genome axis."""
+        from ..core import qor as qor_mod
+
+        ref = self.exact_output(inputs)
+        outs = self.simulate_batch(
+            genomes, library, inputs, rank_genes=rank_genes
+        )
+        return qor_mod.psnr_batch(ref, outs, peak)
 
     # --- deployment (for XLA synthesis) ----------------------------------
     def matmul_shape(self) -> Tuple[int, int, int]:

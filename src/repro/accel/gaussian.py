@@ -11,11 +11,14 @@ multiplier slot (DESIGN.md §2).
 
 from __future__ import annotations
 
+import threading
+from collections import OrderedDict
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..core.acl.library import Circuit
+from ..core.acl.library import Circuit, Library
+from ._batchsim import grouped_apply, lut_gather, mul_lut
 from .base import Accelerator, Slot
 from .images import sample_images
 
@@ -30,17 +33,44 @@ _TREE = [(0, 1), (2, 3), (4, 5), (6, 7), (9, 10), (11, 12), (13, 14), (15, 8)]
 
 
 def _im2col(images: np.ndarray) -> np.ndarray:
-    """(n, H, W) -> (n*(H-2)*(W-2), 9) sliding 3x3 windows."""
-    n, h, w = images.shape
-    cols = []
-    for dy in range(3):
-        for dx in range(3):
-            cols.append(images[:, dy : h - 2 + dy, dx : w - 2 + dx].reshape(n, -1))
-    return np.stack(cols, axis=-1).reshape(-1, 9)
+    """(..., n, H, W) -> (..., n*(H-2)*(W-2), 9) sliding 3x3 windows.
+
+    Window element (dy, dx) lands in column 3*dy+dx, matching the slot
+    order of the 9 multipliers."""
+    win = np.lib.stride_tricks.sliding_window_view(images, (3, 3), axis=(-2, -1))
+    return win.reshape(images.shape[:-3] + (-1, 9))
+
+
+# QoR evaluation re-derives the im2col of the SAME canonical
+# sample_inputs(n, seed) images on every label batch of a campaign; keyed
+# by content, the windows are built once.  Only shared (n, H, W) inputs
+# are cached — per-genome intermediate stacks vary per batch.
+_IM2COL_CACHE: "OrderedDict[tuple, np.ndarray]" = OrderedDict()
+_IM2COL_CACHE_MAX = 8
+_IM2COL_LOCK = threading.Lock()  # scheduler worker threads share this
+
+
+def _im2col_cached(images: np.ndarray) -> np.ndarray:
+    if images.ndim != 3 or images.nbytes > (1 << 22):
+        return _im2col(images)
+    key = (images.shape, images.dtype.str, images.tobytes())
+    with _IM2COL_LOCK:
+        cols = _IM2COL_CACHE.get(key)
+        if cols is not None:
+            _IM2COL_CACHE.move_to_end(key)
+            return cols
+    cols = _im2col(images)
+    cols.setflags(write=False)
+    with _IM2COL_LOCK:
+        _IM2COL_CACHE[key] = cols
+        while len(_IM2COL_CACHE) > _IM2COL_CACHE_MAX:
+            _IM2COL_CACHE.popitem(last=False)
+    return cols
 
 
 class GaussianFilter(Accelerator):
     name = "gaussian3x3"
+    batched_sim = True
     slots = [Slot(f"mul{i}", "mul8u", 1.0) for i in range(9)] + [
         Slot(f"add{i}", "add16", 1.0) for i in range(8)
     ]
@@ -49,15 +79,15 @@ class GaussianFilter(Accelerator):
         return sample_images(n, size=32, seed=seed)
 
     def _run(self, images: np.ndarray, muls: Sequence, adds: Sequence) -> np.ndarray:
-        cols = _im2col(images)  # (m, 9)
-        prods = [muls[i](cols[:, i], GAUSS_COEFFS[i]) for i in range(9)]
+        cols = _im2col_cached(images)  # (..., m, 9)
+        prods = [muls[i](cols[..., i], GAUSS_COEFFS[i]) for i in range(9)]
         vals = list(prods)  # indices 0..8; adder outputs appended as 9..16
         for fn, (ia, ib) in zip(adds, _TREE):
             vals.append(fn(vals[ia], vals[ib]))
         acc = vals[-1]
         out = acc >> 4  # /16
-        n, h, w = images.shape
-        return out.reshape(n, h - 2, w - 2)
+        h, w = images.shape[-2:]
+        return out.reshape(images.shape[:-2] + (h - 2, w - 2))
 
     def simulate(self, circuits: Sequence[Circuit], inputs: np.ndarray) -> np.ndarray:
         muls = [c.fn for c in circuits[:9]]
@@ -68,6 +98,39 @@ class GaussianFilter(Accelerator):
         exact_mul = lambda a, b: a * b
         exact_add = lambda a, b: a + b
         return self._run(inputs, [exact_mul] * 9, [exact_add] * 8)
+
+    def simulate_batch(
+        self,
+        genomes: np.ndarray,
+        library: Library,
+        inputs: np.ndarray,
+        *,
+        rank_genes: bool = False,
+        per_genome_inputs: bool = False,
+    ) -> np.ndarray:
+        """Vectorized population sim: one (G, m, 9) LUT gather for all
+        multiplier slots, adder tree applied per distinct circuit over
+        the sub-population that chose it."""
+        genomes = np.atleast_2d(np.asarray(genomes, dtype=np.int64))
+        images = np.asarray(inputs)
+        G = len(genomes)
+        cols = (
+            _im2col(images) if per_genome_inputs else _im2col_cached(images)
+        )  # (G, m, 9) or (m, 9)
+        lut = mul_lut(library, "mul8u", GAUSS_COEFFS, tag=self.name)
+        prods = lut_gather(
+            lut, genomes[:, :9], cols, per_genome=per_genome_inputs
+        )  # (G, m, 9)
+        add_fns = [c.fn for c in library.kind("add16")]
+        vals = [prods[..., i] for i in range(9)]
+        for j, (ia, ib) in enumerate(_TREE):
+            vals.append(
+                grouped_apply(add_fns, genomes[:, 9 + j], vals[ia], vals[ib])
+            )
+        out = vals[-1] >> 4
+        h, w = images.shape[-2:]
+        lead = images.shape[:-2] if per_genome_inputs else (G,) + images.shape[:-2]
+        return out.reshape(lead + (h - 2, w - 2))
 
     # --- deployment -------------------------------------------------------
     def matmul_shape(self) -> Tuple[int, int, int]:

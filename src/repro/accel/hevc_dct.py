@@ -24,7 +24,8 @@ from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..core.acl.library import Circuit
+from ..core.acl.library import Circuit, Library
+from ._batchsim import grouped_apply, lut_gather, mul_lut
 from .base import Accelerator, Slot
 from .images import sample_images
 
@@ -57,11 +58,12 @@ def signed16(fn: Callable) -> Callable:
 
 
 def _blocks(images: np.ndarray) -> np.ndarray:
-    """(n, H, W) uint8 -> (m, 4, 4) signed residual blocks (pixel - 128)."""
-    n, h, w = images.shape
+    """(..., n, H, W) uint8 -> (..., m, 4, 4) signed residual blocks
+    (pixel - 128); leading axes (e.g. a genome batch) pass through."""
+    lead, (n, h, w) = images.shape[:-3], images.shape[-3:]
     h4, w4 = h - h % 4, w - w % 4
-    x = images[:, :h4, :w4].reshape(n, h4 // 4, 4, w4 // 4, 4)
-    x = x.transpose(0, 1, 3, 2, 4).reshape(-1, 4, 4)
+    x = images[..., :h4, :w4].reshape(lead + (n, h4 // 4, 4, w4 // 4, 4))
+    x = np.moveaxis(x, -2, -3).reshape(lead + (-1, 4, 4))
     return x.astype(np.int64) - 128
 
 
@@ -81,8 +83,30 @@ def _rshift_round(v: np.ndarray, k: int) -> np.ndarray:
     return (v + (1 << (k - 1))) >> k
 
 
+def _mcm_apply_batch(
+    row: int,
+    x: np.ndarray,
+    mul_genes: np.ndarray,
+    add_genes: np.ndarray,
+    library: Library,
+    *,
+    per_genome: bool,
+) -> np.ndarray:
+    """Population MCM: products via one signed LUT gather (index = value
+    + 128), adder tree grouped by distinct circuit.  ``x``: (..., 4)
+    shared or (G, ..., 4) per-genome; returns (G, ...)."""
+    lut = mul_lut(library, "mul8s", HEVC_C[row], tag=f"mcm{row}")
+    prods = lut_gather(lut, mul_genes, x + 128, per_genome=per_genome)
+    add_fns = [signed16(c.fn) for c in library.kind("add16")]
+    s0 = grouped_apply(add_fns, add_genes[:, 0], prods[..., 0], prods[..., 1])
+    s1 = grouped_apply(add_fns, add_genes[:, 1], prods[..., 2], prods[..., 3])
+    return grouped_apply(add_fns, add_genes[:, 2], s0, s1)
+
+
 class MCMAccelerator(Accelerator):
     """One MCM block (paper: MCM1..MCM4 of the HEVC use-case)."""
+
+    batched_sim = True
 
     def __init__(self, row: int):
         assert 0 <= row < 4
@@ -107,6 +131,21 @@ class MCMAccelerator(Accelerator):
 
     def exact_output(self, inputs: np.ndarray) -> np.ndarray:
         return inputs @ HEVC_C[self.row]
+
+    def simulate_batch(
+        self,
+        genomes: np.ndarray,
+        library: Library,
+        inputs: np.ndarray,
+        *,
+        rank_genes: bool = False,
+        per_genome_inputs: bool = False,
+    ) -> np.ndarray:
+        genomes = np.atleast_2d(np.asarray(genomes, dtype=np.int64))
+        return _mcm_apply_batch(
+            self.row, np.asarray(inputs), genomes[:, :4], genomes[:, 4:7],
+            library, per_genome=per_genome_inputs,
+        )
 
     def matmul_shape(self) -> Tuple[int, int, int]:
         return (1024, 4, 1)
@@ -139,6 +178,7 @@ class HEVCDct(Accelerator):
     blocks), applied column-wise then row-wise with a >>8 renorm."""
 
     name = "hevc_dct4x4"
+    batched_sim = True
     deploy_passes = 2  # column stage + row stage
 
     def __init__(self):
@@ -162,21 +202,21 @@ class HEVCDct(Accelerator):
         return per
 
     def _transform(self, blocks: np.ndarray, per) -> np.ndarray:
-        """blocks: (m, 4, 4) -> coefficients (m, 4, 4)."""
+        """blocks: (..., m, 4, 4) -> coefficients (..., m, 4, 4)."""
         # stage 1: columns.  T[i, c] = MCM_i(X[:, c])
         t = np.stack(
             [
-                _mcm_apply(r, blocks.transpose(0, 2, 1), per[r][0], per[r][1])
+                _mcm_apply(r, np.swapaxes(blocks, -1, -2), per[r][0], per[r][1])
                 for r in range(4)
             ],
-            axis=1,
-        )  # (m, 4(row), 4(col))
+            axis=-2,
+        )  # (..., m, 4(row), 4(col))
         t = np.clip(_rshift_round(t, _SHIFT1), -128, 127)
         # stage 2: rows.  Y[i, k] = MCM_k(T[i, :])  (transform the rows)
         y = np.stack(
             [_mcm_apply(r, t, per[r][0], per[r][1]) for r in range(4)],
-            axis=2,
-        )  # (m, 4, 4)
+            axis=-1,
+        )  # (..., m, 4, 4)
         return y
 
     def _reconstruct(self, coeffs: np.ndarray) -> np.ndarray:
@@ -195,6 +235,49 @@ class HEVCDct(Accelerator):
             ([lambda a, b: a * b] * 4, [lambda a, b: a + b] * 3) for _ in range(4)
         ]
         return self._reconstruct(self._transform(_blocks(inputs), exact))
+
+    def _transform_batch(
+        self,
+        blocks: np.ndarray,
+        genomes: np.ndarray,
+        library: Library,
+        *,
+        per_genome: bool,
+    ) -> np.ndarray:
+        """Population transform: gene column 7r+j is MCM r's multiplier
+        j, 7r+4+j its adder j (slot concatenation order)."""
+
+        def mcm(r, x, per_g):
+            return _mcm_apply_batch(
+                r, x,
+                genomes[:, 7 * r : 7 * r + 4],
+                genomes[:, 7 * r + 4 : 7 * r + 7],
+                library, per_genome=per_g,
+            )
+
+        xt = np.swapaxes(blocks, -1, -2)
+        t = np.stack([mcm(r, xt, per_genome) for r in range(4)], axis=-2)
+        t = np.clip(_rshift_round(t, _SHIFT1), -128, 127)
+        # stage 2 sees the PER-GENOME intermediate t regardless of how
+        # the population's input was shared
+        y = np.stack([mcm(r, t, True) for r in range(4)], axis=-1)
+        return y
+
+    def simulate_batch(
+        self,
+        genomes: np.ndarray,
+        library: Library,
+        inputs: np.ndarray,
+        *,
+        rank_genes: bool = False,
+        per_genome_inputs: bool = False,
+    ) -> np.ndarray:
+        genomes = np.atleast_2d(np.asarray(genomes, dtype=np.int64))
+        coeffs = self._transform_batch(
+            _blocks(np.asarray(inputs)), genomes, library,
+            per_genome=per_genome_inputs,
+        )
+        return self._reconstruct(coeffs)
 
     def matmul_shape(self) -> Tuple[int, int, int]:
         return (1024, 4, 4)

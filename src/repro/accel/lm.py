@@ -133,6 +133,31 @@ class LMAccelerator(Accelerator):
             self._logits_cache[key] = self._forward(None, inputs)
         return self._logits_cache[key]
 
+    def qor_batch(
+        self,
+        genomes: np.ndarray,
+        library,
+        inputs: np.ndarray,
+        *,
+        rank_genes: bool = False,
+        peak: float | None = None,
+    ) -> np.ndarray:
+        """Population path for the LM: the exact forward runs once for
+        the whole batch (cached logits), distinct policies run once each
+        (NSGA-II survivor sets repeat genomes heavily), and the per-
+        genome logits are scored immediately instead of stacking the
+        whole population's logits in memory."""
+        from ..core import qor as qor_mod
+
+        genomes = np.atleast_2d(np.asarray(genomes))
+        ref = self.exact_output(inputs)
+        uniq, inverse = np.unique(genomes, axis=0, return_inverse=True)
+        vals = np.empty(len(uniq), dtype=np.float64)
+        for i, g in enumerate(uniq):
+            circuits, _ = self.decode(g, library, rank_genes=rank_genes)
+            vals[i] = qor_mod.psnr(ref, self.simulate(circuits, inputs), peak)
+        return vals[inverse]
+
     def build_deploy(self, specs: Sequence, inputs: Optional[np.ndarray] = None):
         """Deployment = the policy'd forward step of the reduced config;
         the compile's cost_analysis carries the (1 + rank)-matmul cost

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import numpy as np
 
-__all__ = ["psnr", "mean_psnr", "ce_delta", "PSNR_CAP"]
+__all__ = ["psnr", "psnr_batch", "mean_psnr", "ce_delta", "PSNR_CAP"]
 
 # Identical outputs would give +inf PSNR; the paper's plots saturate around
 # this value, and a finite cap keeps regression targets well-conditioned.
@@ -27,6 +27,27 @@ def psnr(ref: np.ndarray, out: np.ndarray, peak: float | None = None) -> float:
     if mse == 0.0:
         return PSNR_CAP
     return float(min(10.0 * np.log10(peak * peak / mse), PSNR_CAP))
+
+
+def psnr_batch(
+    ref: np.ndarray, outs: np.ndarray, peak: float | None = None
+) -> np.ndarray:
+    """PSNR of a genome-batched output stack against one reference.
+
+    ``outs`` has one leading genome axis over ``ref``'s shape; returns a
+    float64 vector of per-genome PSNRs, bit-identical to calling
+    ``psnr(ref, outs[g], peak)`` for each g (each genome's MSE reduces
+    over the same contiguous block in the same pairwise order)."""
+    ref = np.asarray(ref, dtype=np.float64)
+    outs = np.asarray(outs, dtype=np.float64)
+    if peak is None:
+        peak = float(np.max(np.abs(ref))) or 1.0
+    d = np.ascontiguousarray(outs - ref[None]) ** 2
+    mse = d.reshape(len(outs), -1).mean(axis=1)
+    vals = np.full(len(outs), PSNR_CAP, dtype=np.float64)
+    nz = mse > 0.0
+    vals[nz] = np.minimum(10.0 * np.log10(peak * peak / mse[nz]), PSNR_CAP)
+    return vals
 
 
 def mean_psnr(refs, outs, peak: float | None = None) -> float:

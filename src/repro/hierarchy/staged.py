@@ -46,6 +46,8 @@ class Coupling:
     to stage-(i+1) deployment *activation* (the preprocessed matmul
     operand, e.g. im2col windows or block rows).  ``name`` participates
     in the label-store fingerprint so editing a coupling re-keys labels.
+    ``sim`` must be elementwise/broadcast-safe: the batched population
+    path pushes intermediates with a leading genome axis through it.
     """
 
     name: str = "identity"
@@ -83,6 +85,12 @@ class StagedPipeline(Accelerator):
             self.slots += [
                 Slot(f"{st.name}.{s.name}", s.kind, s.weight) for s in st.slots
             ]
+
+    @property
+    def batched_sim(self) -> bool:
+        """The chain handles a leading genome axis iff every stage does
+        (couplings are elementwise by contract)."""
+        return all(getattr(st, "batched_sim", False) for st in self.stages)
 
     # --- genome layout ----------------------------------------------------
     def stage_slot_counts(self) -> List[int]:
@@ -165,6 +173,48 @@ class StagedPipeline(Accelerator):
         x = inputs
         for i, st in enumerate(self.stages):
             y = st.simulate(per_stage[i], x)
+            x = self.couplings[i].apply_sim(y) if i < len(self.stages) - 1 else y
+        return x
+
+    def split_genome_batch(
+        self, genomes: np.ndarray, *, rank_genes: bool = False
+    ) -> List[np.ndarray]:
+        """(G, pipeline genome) -> per-stage (G, stage genome) column
+        blocks (the population form of ``split_genome``)."""
+        genomes = np.atleast_2d(np.asarray(genomes))
+        out = []
+        s_off, r_off = 0, len(self.slots)
+        for ns, nm in zip(self.stage_slot_counts(), self.stage_mul_counts()):
+            parts = [genomes[:, s_off : s_off + ns]]
+            if rank_genes:
+                parts.append(genomes[:, r_off : r_off + nm])
+            out.append(np.concatenate(parts, axis=1))
+            s_off += ns
+            r_off += nm
+        return out
+
+    def simulate_batch(
+        self,
+        genomes: np.ndarray,
+        library,
+        inputs: np.ndarray,
+        *,
+        rank_genes: bool = False,
+        per_genome_inputs: bool = False,
+    ) -> np.ndarray:
+        """Population sim of the chain: each stage evaluates the whole
+        genome batch at once (vectorized where the stage supports it),
+        and the per-genome intermediate stack flows through the couplings
+        elementwise."""
+        genomes = np.atleast_2d(np.asarray(genomes))
+        stage_genomes = self.split_genome_batch(genomes, rank_genes=rank_genes)
+        x, per = inputs, per_genome_inputs
+        for i, st in enumerate(self.stages):
+            y = st.simulate_batch(
+                stage_genomes[i], library, x,
+                rank_genes=rank_genes, per_genome_inputs=per,
+            )
+            per = True  # stage outputs always carry the genome axis
             x = self.couplings[i].apply_sim(y) if i < len(self.stages) - 1 else y
         return x
 
@@ -277,6 +327,35 @@ class StageView(Accelerator):
 
     def exact_output(self, inputs: np.ndarray) -> np.ndarray:
         return self.pipeline.exact_output(inputs)
+
+    def simulate_batch(
+        self,
+        genomes: np.ndarray,
+        library,
+        inputs: np.ndarray,
+        *,
+        rank_genes: bool = False,
+        per_genome_inputs: bool = False,
+    ) -> np.ndarray:
+        """In-situ population sim: exact prefix once for the whole
+        population, this stage batched, exact suffix over the per-genome
+        intermediate stack."""
+        if per_genome_inputs:
+            # rare (a StageView nested inside another pipeline): fall
+            # back to the per-genome loop
+            return super().simulate_batch(
+                genomes, library, inputs,
+                rank_genes=rank_genes, per_genome_inputs=True,
+            )
+        pipe = self.pipeline
+        x = pipe.stage_inputs(inputs, self.index)   # shared exact prefix
+        y = self.stage.simulate_batch(
+            genomes, library, x, rank_genes=rank_genes
+        )
+        for i in range(self.index, len(pipe.stages) - 1):
+            x = pipe.couplings[i].apply_sim(y)
+            y = pipe.stages[i + 1].exact_output_batch(x, per_genome_inputs=True)
+        return y
 
     # hardware: the stage's own deployment, at its in-situ input
     def matmul_shape(self) -> Tuple[int, int, int]:

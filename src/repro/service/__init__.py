@@ -25,6 +25,7 @@ from .store import (
     label_key,
 )
 from .scheduler import EvalScheduler
+from .workers import ProcessPoolLabeler
 from .campaigns import (
     CampaignManager,
     CampaignSpec,
@@ -41,6 +42,7 @@ __all__ = [
     "JsonlLabelStore",
     "label_key",
     "EvalScheduler",
+    "ProcessPoolLabeler",
     "CampaignManager",
     "CampaignSpec",
     "HierarchicalSpec",

@@ -25,6 +25,17 @@ def main(argv=None):
                     help="JSONL label-store path (persistent across runs)")
     ap.add_argument("--eval-workers", type=int, default=2,
                     help="ground-truth labeling worker threads")
+    ap.add_argument("--eval-backend", choices=("thread", "process"),
+                    default="thread",
+                    help="where batched ground truth runs: in-process "
+                         "threads, or a spawn-safe process pool (the only "
+                         "backend that parallelizes the GIL-bound "
+                         "behavioral sim + XLA tracing)")
+    ap.add_argument("--process-workers", type=int, default=None,
+                    help="process-pool size (default: --eval-workers)")
+    ap.add_argument("--chunk-size", type=int, default=None,
+                    help="genomes per process-pool chunk (default: "
+                         "auto, ~2 chunks per worker)")
     ap.add_argument("--campaign-workers", type=int, default=2,
                     help="concurrently running campaigns")
     ap.add_argument("--hier-workers", type=int, default=1,
@@ -42,6 +53,9 @@ def main(argv=None):
     manager = CampaignManager(
         store,
         eval_workers=args.eval_workers,
+        eval_backend=args.eval_backend,
+        process_workers=args.process_workers,
+        chunk_size=args.chunk_size,
         campaign_workers=args.campaign_workers,
         hier_workers=args.hier_workers,
         max_batch=args.max_batch,

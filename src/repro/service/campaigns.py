@@ -68,19 +68,22 @@ def unregister_accelerator(name: str) -> bool:
     return _REGISTRY.pop(name, None) is not None
 
 
-def make_accelerator(name: str):
+def make_accelerator(name: str, *, builtin_only: bool = False):
     """Accelerator factory for service requests.
 
     ``mcm1``..``mcm4`` (HEVC DCT rows), ``hevc_dct4x4``, ``gaussian3x3``,
     ``smoothed_dct`` (the staged Gaussian->DCT pipeline),
     ``<pipeline>/stage<i>`` (one stage of a staged pipeline, QoR in situ)
     and ``lm:<arch>`` (e.g. ``lm:granite-8b``).  Names registered via
-    ``register_accelerator`` take precedence."""
-    if name in _REGISTRY:
+    ``register_accelerator`` take precedence unless ``builtin_only``
+    (the process-pool labeler resolves with the registry bypassed: a
+    spawned worker has no registry, so the parent must mirror what the
+    worker would build)."""
+    if not builtin_only and name in _REGISTRY:
         return _REGISTRY[name]()
     if "/stage" in name:
         base, _, idx = name.rpartition("/stage")
-        pipe = make_accelerator(base)
+        pipe = make_accelerator(base, builtin_only=builtin_only)
         if not hasattr(pipe, "stage_views"):
             raise ValueError(f"{base!r} is not a staged pipeline")
         views = pipe.stage_views()
@@ -432,6 +435,9 @@ class CampaignManager:
         *,
         scheduler: Optional[EvalScheduler] = None,
         eval_workers: int = 2,
+        eval_backend: str = "thread",
+        process_workers: Optional[int] = None,
+        chunk_size: Optional[int] = None,
         campaign_workers: int = 2,
         hier_workers: int = 1,
         max_batch: int = 32,
@@ -443,6 +449,8 @@ class CampaignManager:
         self.scheduler = scheduler or EvalScheduler(
             self.store, n_workers=eval_workers,
             max_batch=max_batch, max_wait_s=max_wait_s,
+            backend=eval_backend, process_workers=process_workers,
+            chunk_size=chunk_size,
         )
         self.registry = SurrogateRegistry()
         self._pool = ThreadPoolExecutor(

@@ -17,6 +17,14 @@ through one scheduler that
 Requests are only batched together when they share an evaluation
 context (same accelerator / library / QoR signature) — a batch is one
 ``ctx.ground_truth`` call.
+
+``backend`` selects where a batch's ground truth runs: ``"thread"``
+labels in-process on the dispatching worker thread (fine for cheap
+contexts); ``"process"`` fans the batch out to a spawn-safe worker
+process pool (``workers.ProcessPoolLabeler``) — the only way the
+GIL-bound behavioral simulation and GIL-holding XLA tracing actually
+parallelize.  Contexts the process pool cannot rebuild by name fall
+back to the in-process path transparently.
 """
 
 from __future__ import annotations
@@ -62,10 +70,28 @@ class EvalScheduler:
         n_workers: int = 2,
         max_batch: int = 32,
         max_wait_s: float = 0.02,
+        backend: str = "thread",
+        process_workers: Optional[int] = None,
+        chunk_size: Optional[int] = None,
     ):
+        if backend not in ("thread", "process"):
+            raise ValueError(
+                f"backend must be 'thread' or 'process', got {backend!r}"
+            )
         self.store = store
+        self.backend = backend
         self.max_batch = int(max_batch)
         self.max_wait_s = float(max_wait_s)
+        self._proc = None
+        if backend == "process":
+            from .workers import ProcessPoolLabeler
+
+            self._proc = ProcessPoolLabeler(
+                process_workers if process_workers is not None else n_workers,
+                chunk_size=chunk_size,
+            )
+        self.n_process_batches = 0
+        self.n_process_fallbacks = 0
         self._pool = ThreadPoolExecutor(n_workers, thread_name_prefix="eval")
         self._cv = threading.Condition()
         self._pending: deque = deque()          # _Entry awaiting dispatch
@@ -169,9 +195,12 @@ class EvalScheduler:
                     self._cv.wait()
                 if self._stopped and not self._pending:
                     return
-            # admission window: let concurrently-submitting campaigns
-            # land their requests so the drain below coalesces them
-            if self.max_wait_s > 0:
+                # pending campaigns BEFORE the admission window: the
+                # window only exists to coalesce concurrent campaigns,
+                # so a lone campaign skips it (single-campaign latency —
+                # every batch used to eat the full wait)
+                pending_campaigns = {e.origin for e in self._pending}
+            if self.max_wait_s > 0 and len(pending_campaigns) > 1:
                 time.sleep(self.max_wait_s)
             batch: List[_Entry] = []
             bad: List = []  # (entry, exc) whose ctx.fingerprint raised
@@ -213,16 +242,30 @@ class EvalScheduler:
                 for e in batch:
                     e.future.set_exception(exc)
 
+    def _ground_truth(self, ctx: EvalContext, genomes: np.ndarray):
+        """One batched ground-truth call, on the configured backend."""
+        if self._proc is not None:
+            if self._proc.can_label(ctx):
+                with self._cv:
+                    self.n_process_batches += 1
+                return self._proc.label(ctx, genomes)
+            with self._cv:
+                self.n_process_fallbacks += 1
+        return ctx.ground_truth(genomes)
+
     def _run_batch(self, batch: List[_Entry]) -> None:
         ctx = batch[0].ctx
         try:
             genomes = np.stack([e.genome for e in batch])
-            labels = ctx.ground_truth(genomes)
-            recs = []
-            for i, e in enumerate(batch):
-                rec = {k: float(labels[k][i]) for k in LABEL_KEYS}
-                self.store.put(e.key, rec)
-                recs.append(rec)
+            labels = self._ground_truth(ctx, genomes)
+            recs = [
+                {k: float(labels[k][i]) for k in LABEL_KEYS}
+                for i in range(len(batch))
+            ]
+            # one lock acquisition + one buffered write for the batch
+            self.store.put_many(
+                (e.key, rec) for e, rec in zip(batch, recs)
+            )
         except Exception as exc:
             # label OR store failure: fail every waiter instead of
             # leaving dead inflight entries that hang future dedup hits
@@ -254,6 +297,9 @@ class EvalScheduler:
     def stats(self) -> Dict:
         with self._cv:
             return {
+                "backend": self.backend,
+                "process_batches": self.n_process_batches,
+                "process_fallbacks": self.n_process_fallbacks,
                 "requests": self.n_requests,
                 "store_hits": self.n_store_hits,
                 "inflight_dedup_hits": self.n_inflight_hits,
@@ -291,3 +337,5 @@ class EvalScheduler:
         if wait:
             self._batcher.join(timeout=5)
         self._pool.shutdown(wait=wait)
+        if self._proc is not None:
+            self._proc.shutdown(wait=wait)

@@ -196,6 +196,20 @@ class LabelStore:
         with self._lock:
             self._put(key, rec)
 
+    def put_many(self, items) -> None:
+        """Store a labeled batch under ONE lock acquisition.  ``items``
+        is an iterable of ``(key, labels)`` pairs; implementations may
+        override ``_put_batch`` to buffer the batch into a single
+        backing write."""
+        recs = [
+            (key, {k: float(labels[k]) for k in LABEL_KEYS})
+            for key, labels in items
+        ]
+        if not recs:
+            return
+        with self._lock:
+            self._put_batch(recs)
+
     def __len__(self) -> int:
         with self._lock:
             return self._len()
@@ -217,6 +231,10 @@ class LabelStore:
 
     def _put(self, key: str, rec: Dict[str, float]) -> None:
         raise NotImplementedError
+
+    def _put_batch(self, recs) -> None:
+        for key, rec in recs:
+            self._put(key, rec)
 
     def _len(self) -> int:
         raise NotImplementedError
@@ -343,21 +361,34 @@ class JsonlLabelStore(LabelStore):
         return self._data.get(key)
 
     def _put(self, key, rec):
-        known = key in self._data
-        self._data[key] = rec
-        if known:
-            return  # labels are deterministic: skip the duplicate append
+        self._put_batch([(key, rec)])
+
+    def _put_batch(self, recs) -> None:
+        """One buffered append/flush for a whole labeled batch (the
+        per-label path syscalls once per record); duplicates of known
+        keys update the index only (labels are deterministic)."""
+        fresh = []
+        for key, rec in recs:
+            known = key in self._data
+            self._data[key] = rec
+            if not known:
+                fresh.append((key, rec))
+        if not fresh:
+            return
         if self._fh is None:
             self._fh = open(self.path, "a")
         # consume any foreign tail BEFORE appending, so advancing the
         # offset below cannot skip another process's records; advancing
-        # it keeps our own append from being re-replayed (and re-counted)
-        # by the next refresh
+        # it keeps our own appends from being re-replayed (and
+        # re-counted) by the next refresh
         self._replay()
-        self._fh.write(json.dumps({"k": key, "l": rec, "t": time.time()},
-                                  sort_keys=True) + "\n")
+        now = time.time()
+        self._fh.write("".join(
+            json.dumps({"k": key, "l": rec, "t": now}, sort_keys=True) + "\n"
+            for key, rec in fresh
+        ))
         self._fh.flush()
-        self._n_lines += 1
+        self._n_lines += len(fresh)
         self._offset = self._fh.tell()
 
     def _len(self):

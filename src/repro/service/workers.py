@@ -1,0 +1,218 @@
+"""Process-pool ground-truth labeler.
+
+Behavioral simulation is numpy (GIL-bound) and XLA synthesis holds the
+GIL through tracing — thread workers give ZERO labeling parallelism (the
+scheduler's thread pool only overlaps I/O).  This module fans whole
+coalesced label batches out to a pool of **spawned worker processes**,
+each of which initializes once (library + exhaustive product tables
+warmed at startup, accelerators and evaluation contexts cached per
+fingerprint) and then labels genome chunks with the same batched
+``EvalContext.ground_truth`` path the thread backend uses.
+
+Labels are a pure function of the evaluation context fingerprint and the
+genome, so process-backend labels are byte-identical to thread-backend
+labels (tests pin this).
+
+Nothing heavyweight is pickled: workers rebuild the accelerator from its
+NAME via ``make_accelerator`` and the default library from scratch.  A
+context is process-safe exactly when a fresh process would derive the
+SAME context fingerprint from the name — ``can_label`` checks that in
+the parent (resolving the name with the registry bypassed, since
+``register_accelerator`` entries don't exist in a spawned child) and the
+scheduler falls back to in-process labeling when it fails (ad-hoc
+registered pipelines, subset libraries, parameterized accelerators).
+"""
+
+from __future__ import annotations
+
+import math
+import multiprocessing as mp
+import os
+import threading
+from concurrent.futures import ProcessPoolExecutor
+from typing import Dict, Optional
+
+import numpy as np
+
+from .store import LABEL_KEYS, EvalContext
+
+__all__ = ["ProcessPoolLabeler", "WORKER_XLA_FLAGS", "warm_library"]
+
+# Appended to XLA_FLAGS in each worker BEFORE jax loads: one compile's
+# parallel LLVM codegen would fight the other workers for cores, so each
+# worker compiles single-threaded and the pool supplies the parallelism.
+# Codegen splitting only parallelizes backend code emission — HLO-level
+# cost analysis (the labels) is unaffected.
+WORKER_XLA_FLAGS = "--xla_cpu_parallel_codegen_split_count=1"
+
+# per-worker-process state: the warm library and the contexts built so far
+_WORKER_STATE: Dict = {}
+
+
+def warm_library(lib) -> None:
+    """Build every multiplier circuit's labeling-side caches: the
+    exhaustive product table (the batched sim's LUT source), the error
+    table, its effective rank and the deployment-rank SVD factors.  A
+    cold labeler pays these lazily INSIDE its first batches (one
+    256x256 SVD per circuit); warming them once up front keeps them out
+    of the steady-state label stream."""
+    for kind in ("mul8u", "mul8s"):
+        for c in lib.kind(kind):
+            c.table
+            c.etab
+            r = c.deploy_rank
+            if r > 0:
+                c.factors(r)
+
+
+def _init_worker(xla_flags: str = "") -> None:
+    """Run once per spawned process: pin down XLA's threading before jax
+    is imported, then build the library and warm the per-circuit
+    labeling caches so the first labeled chunk doesn't pay them."""
+    if xla_flags:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "") + " " + xla_flags
+        ).strip()
+    from ..core.acl.library import default_library
+
+    lib = default_library()
+    warm_library(lib)
+    _WORKER_STATE["library"] = lib
+    _WORKER_STATE["ctxs"] = {}
+
+
+def _worker_label(
+    accel_name: str,
+    rank_genes: bool,
+    n_qor_samples: int,
+    qor_seed: int,
+    expected_fp: str,
+    genomes: np.ndarray,
+) -> Dict[str, np.ndarray]:
+    """Label one genome chunk inside a worker process."""
+    if "library" not in _WORKER_STATE:  # fork-start or initializer skipped
+        _init_worker()
+    from .campaigns import make_accelerator
+
+    key = (accel_name, bool(rank_genes), int(n_qor_samples), int(qor_seed))
+    ctx = _WORKER_STATE["ctxs"].get(key)
+    if ctx is None:
+        ctx = EvalContext(
+            make_accelerator(accel_name, builtin_only=True),
+            _WORKER_STATE["library"],
+            rank_genes=rank_genes,
+            n_qor_samples=n_qor_samples,
+            qor_seed=qor_seed,
+        )
+        _WORKER_STATE["ctxs"][key] = ctx
+    if ctx.fingerprint != expected_fp:
+        # the parent's safety check should make this unreachable; guard
+        # anyway so a drifted worker can never poison the store
+        raise RuntimeError(
+            f"worker context fingerprint {ctx.fingerprint} != parent "
+            f"{expected_fp} for {accel_name!r}"
+        )
+    labels = ctx.ground_truth(np.asarray(genomes, dtype=np.int64))
+    return {k: np.asarray(labels[k]) for k in LABEL_KEYS}
+
+
+class ProcessPoolLabeler:
+    """Chunked batch fan-out to spawn-safe worker processes.
+
+    ``label`` splits a genome batch into ~``2 x n_workers`` chunks (or
+    fixed ``chunk_size`` rows) and reassembles the per-chunk label dicts
+    in order.  ``can_label`` gates which contexts may cross the process
+    boundary; callers fall back to in-process labeling otherwise."""
+
+    def __init__(
+        self,
+        n_workers: int = 2,
+        *,
+        chunk_size: Optional[int] = None,
+        mp_context: str = "spawn",
+        xla_flags: str = WORKER_XLA_FLAGS,
+    ):
+        self.n_workers = max(1, int(n_workers))
+        self.chunk_size = None if chunk_size is None else max(1, int(chunk_size))
+        self._pool = ProcessPoolExecutor(
+            self.n_workers,
+            mp_context=mp.get_context(mp_context),
+            initializer=_init_worker,
+            initargs=(xla_flags,),
+        )
+        self._lock = threading.Lock()
+        self._safe_fps: Dict[str, bool] = {}   # ctx fingerprint -> verdict
+        self.n_chunks = 0
+        self.n_labeled = 0
+
+    # ------------------------------------------------------------------
+    def can_label(self, ctx: EvalContext) -> bool:
+        """True iff a fresh process, given only ``ctx.accel.name``, would
+        rebuild a context with the SAME fingerprint (identical labels and
+        store keys).  Cached per fingerprint."""
+        fp = ctx.fingerprint
+        with self._lock:
+            if fp in self._safe_fps:
+                return self._safe_fps[fp]
+        verdict = False
+        try:
+            from ..core.acl.library import default_library
+            from .campaigns import make_accelerator
+
+            name = getattr(ctx.accel, "name", None)
+            if name:
+                ref = EvalContext(
+                    make_accelerator(name, builtin_only=True),
+                    default_library(),
+                    rank_genes=ctx.rank_genes,
+                    n_qor_samples=ctx.n_qor_samples,
+                    qor_seed=ctx.qor_seed,
+                )
+                verdict = ref.fingerprint == fp
+        except Exception:  # noqa: BLE001 - unresolvable name == not safe
+            verdict = False
+        with self._lock:
+            self._safe_fps[fp] = verdict
+        return verdict
+
+    def _chunks(self, n: int) -> int:
+        if self.chunk_size is not None:
+            return max(1, math.ceil(n / self.chunk_size))
+        # ~2 chunks per worker: keeps the pool busy when chunk costs are
+        # uneven without shredding the batched-sim vectorization
+        return min(n, 2 * self.n_workers)
+
+    def label(self, ctx: EvalContext, genomes: np.ndarray) -> Dict[str, np.ndarray]:
+        """Label a genome batch across the pool (caller must have
+        checked ``can_label``)."""
+        genomes = np.atleast_2d(np.asarray(genomes, dtype=np.int64))
+        parts = [
+            c for c in np.array_split(genomes, self._chunks(len(genomes)))
+            if len(c)
+        ]
+        futures = [
+            self._pool.submit(
+                _worker_label,
+                ctx.accel.name, ctx.rank_genes, ctx.n_qor_samples,
+                ctx.qor_seed, ctx.fingerprint, chunk,
+            )
+            for chunk in parts
+        ]
+        results = [f.result() for f in futures]
+        with self._lock:
+            self.n_chunks += len(parts)
+            self.n_labeled += len(genomes)
+        return {
+            k: np.concatenate([r[k] for r in results]) for k in LABEL_KEYS
+        }
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {
+                "workers": self.n_workers,
+                "chunks": self.n_chunks,
+                "labeled": self.n_labeled,
+            }
+
+    def shutdown(self, *, wait: bool = True) -> None:
+        self._pool.shutdown(wait=wait)
