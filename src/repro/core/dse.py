@@ -10,11 +10,15 @@
 
 Every stage is timed; the result object carries everything the Fig. 5/7/8/9
 benchmarks need.
+
+The loop itself lives in ``core.strategies`` as an ask/tell state machine
+(``Campaign`` + pluggable ``SearchStrategy``); ``run_dse`` and
+``random_search`` are its drive-to-completion wrappers and return results
+byte-identical to the historical blocking implementations.
 """
 
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -26,10 +30,8 @@ if TYPE_CHECKING:  # avoid circular import (accel depends on core.acl)
     from ..accel.base import Accelerator
 from .acl.library import Library, default_library
 from .features import synth
-from .features.pipelines import build_extractor
-from .nsga2 import NSGA2Config, NSGA2Result, nsga2
+from .nsga2 import NSGA2Config, NSGA2Result
 from .pareto import non_dominated_mask
-from .surrogates import make, pcc
 
 __all__ = ["DSEConfig", "DSEResult", "run_dse", "random_search",
            "default_labeler", "label_unique"]
@@ -82,6 +84,7 @@ class DSEConfig:
     pipeline: str = "D"                     # paper's winner
     hw_model: str = "bayesian_ridge"        # paper Fig. 6: best for power
     qor_model: str = "random_forest"        # paper Fig. 6: best for QoR
+    strategy: str = "nsga2"                 # explorer (strategies registry)
     objectives: Tuple[str, ...] = ("qor", "energy")  # qor auto-negated
     n_train: int = 1000                     # paper: 1000 random variants
     n_qor_samples: int = 4
@@ -133,128 +136,40 @@ def _objective_matrix(labels: Dict[str, np.ndarray], names: Sequence[str]) -> np
 def run_dse(
     accel: Accelerator,
     library: Optional[Library] = None,
-    cfg: DSEConfig = DSEConfig(),
+    cfg: Optional[DSEConfig] = None,
     *,
     labeler=None,
     surrogate_provider=None,
+    strategy=None,
     verbose: bool = False,
 ) -> DSEResult:
-    """The three-stage DSE.  ``labeler`` (genomes -> label dict) and
-    ``surrogate_provider`` ((obj, model_name, X, y) -> fitted model) are
-    injectable so the service layer can swap in its persistent label
-    store / coalescing scheduler / warm surrogate registry; the defaults
-    reproduce the classic one-shot in-process behavior exactly."""
+    """The three-stage DSE, driven to completion.  ``labeler`` (genomes
+    -> label dict) and ``surrogate_provider`` ((obj, model_name, X, y) ->
+    fitted model) are injectable so the service layer can swap in its
+    persistent label store / coalescing scheduler / warm surrogate
+    registry; ``strategy`` picks the explorer (a ``strategies`` registry
+    name, a factory, or None for ``cfg.strategy``).  The defaults
+    reproduce the classic one-shot in-process behavior exactly.
+
+    This is now a thin wrapper over the ask/tell ``strategies.Campaign``
+    state machine — interruptible callers (the campaign service) step
+    and snapshot the campaign themselves."""
+    from .strategies.campaign import Campaign, drive
+
+    cfg = cfg if cfg is not None else DSEConfig()
     library = library or default_library()
-    rng = np.random.default_rng(cfg.seed)
-    gene_sizes = accel.gene_sizes(library, rank_genes=cfg.rank_genes)
-    timings: Dict[str, float] = {}
     if labeler is None:
         labeler = default_labeler(
             accel, library,
             rank_genes=cfg.rank_genes, n_qor_samples=cfg.n_qor_samples,
         )
-    if surrogate_provider is None:
-        def surrogate_provider(obj, name, X, y):
-            return make(name, seed=cfg.seed).fit(X, y)
-
-    # ---------------- stage 1: model training -----------------------------
-    t0 = time.perf_counter()
-    train_genomes = rng.integers(0, gene_sizes[None, :],
-                                 size=(cfg.n_train, len(gene_sizes)))
-    # always include the exact reference design (standard DSE practice:
-    # the known-good corner anchors both the surrogates and the front)
-    train_genomes[0] = accel.exact_genome(library, rank_genes=cfg.rank_genes)
-    train_labels = label_unique(labeler, train_genomes)
-    timings["label"] = time.perf_counter() - t0
-
-    t0 = time.perf_counter()
-    extractor = build_extractor(cfg.pipeline, accel, library,
-                                rank_genes=cfg.rank_genes)
-    X = extractor(train_genomes)
-    n_val = max(cfg.n_train // 5, 1)
-    tr, va = slice(n_val, None), slice(0, n_val)
-    models = {}
-    val_pcc = {}
-    for obj in cfg.objectives:
-        name = cfg.qor_model if obj == "qor" else cfg.hw_model
-        m = make(name, seed=cfg.seed).fit(X[tr], train_labels[obj][tr])
-        models[obj] = m
-        val_pcc[obj] = pcc(train_labels[obj][va], m.predict(X[va]))
-    # refit on everything for the search (via the provider, so a warm
-    # surrogate registry can reuse/extend fitted models across campaigns)
-    for obj in cfg.objectives:
-        name = cfg.qor_model if obj == "qor" else cfg.hw_model
-        models[obj] = surrogate_provider(obj, name, X, train_labels[obj])
-    timings["train"] = time.perf_counter() - t0
-    if verbose:
-        print(f"[dse:{accel.name}] val PCC: "
-              + ", ".join(f"{k}={v:.3f}" for k, v in val_pcc.items()))
-
-    # ---------------- stage 2: architecture exploration -------------------
-    t0 = time.perf_counter()
-
-    def evaluate(genomes: np.ndarray) -> np.ndarray:
-        Xg = extractor(genomes)
-        labels = {obj: models[obj].predict(Xg) for obj in cfg.objectives}
-        return _objective_matrix(labels, cfg.objectives)
-
-    init = train_genomes[: cfg.nsga.pop_size].copy()
-    if cfg.warm_start and len(init) >= 4:
-        from ..accel.approxfpgas import circuit_level_front
-
-        half = len(init) // 2
-        per_slot_choices = []
-        for slot in accel.slots:
-            front = circuit_level_front(library, slot.kind)
-            per_slot_choices.append(
-                [library.index(slot.kind, c.name) for c in front]
-            )
-        for t in range(half):
-            for j, choices in enumerate(per_slot_choices):
-                init[t, j] = choices[rng.integers(0, len(choices))]
-    search = nsga2(gene_sizes, evaluate, cfg.nsga, init=init)
-    timings["explore"] = time.perf_counter() - t0
-
-    # ---------------- stage 3: final evaluation ---------------------------
-    # dedupe before labeling: elitist survivors repeat, and each repeat
-    # would otherwise pay full ground truth whenever the labeler's cache
-    # keys miss (e.g. across rank-gene settings)
-    t0 = time.perf_counter()
-    final_labels = label_unique(labeler, search.genomes)
-    timings["final_eval"] = time.perf_counter() - t0
-
-    # the delivered Pareto front is over EVERY synthesized point (search
-    # survivors + the stage-1 training sample — their ground truth is
-    # already paid for)
-    all_genomes = np.concatenate([search.genomes, train_genomes])
-    all_labels = {
-        k: np.concatenate([final_labels[k], train_labels[k]])
-        for k in final_labels
-    }
-    true_obj = _objective_matrix(all_labels, cfg.objectives)
-
-    return DSEResult(
-        accel_name=accel.name,
-        config=cfg,
-        train_genomes=train_genomes,
-        train_labels=train_labels,
-        val_pcc=val_pcc,
-        search=NSGA2Result(
-            genomes=all_genomes,
-            objectives=np.concatenate(
-                [search.objectives, _objective_matrix(train_labels,
-                                                      cfg.objectives)]
-            ),
-            front_mask=non_dominated_mask(true_obj),
-            history=search.history,
-            n_evaluated=search.n_evaluated,
-        ),
-        est_objectives=search.objectives,
-        final_labels=all_labels,
-        true_objectives=true_obj,
-        front_mask=non_dominated_mask(true_obj),
-        timings=timings,
+    campaign = Campaign(
+        accel, library, cfg,
+        strategy=strategy,
+        surrogate_provider=surrogate_provider,
+        verbose=verbose,
     )
+    return drive(campaign, labeler)
 
 
 def random_search(
@@ -268,15 +183,26 @@ def random_search(
     labeler=None,
 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Baseline for Figs. 8/9: label n random variants, return
-    (genomes, objectives, front_mask)."""
+    (genomes, objectives, front_mask).
+
+    Drives a ``RandomStrategy`` through a ground-truth ``Campaign`` (no
+    surrogates, no final stage) — one ask covering the whole budget, so
+    the labeler sees exactly the legacy unique batch."""
+    from .strategies.campaign import Campaign, drive
+    from .strategies.random import RandomStrategy
+
     library = library or default_library()
-    rng = np.random.default_rng(seed)
-    gene_sizes = accel.gene_sizes(library, rank_genes=rank_genes)
-    genomes = rng.integers(0, gene_sizes[None, :], size=(n, len(gene_sizes)))
     # same default labeler as run_dse (QoR inputs from DEFAULT_QOR_SEED),
     # so injected-labeler and in-process baselines are apples-to-apples
     if labeler is None:
         labeler = default_labeler(accel, library, rank_genes=rank_genes)
-    labels = label_unique(labeler, genomes)
-    obj = _objective_matrix(labels, objectives)
-    return genomes, obj, non_dominated_mask(obj)
+    cfg = DSEConfig(objectives=tuple(objectives), rank_genes=rank_genes,
+                    seed=seed)
+    campaign = Campaign(
+        accel, library, cfg,
+        strategy=lambda sizes, _cfg, init=None: RandomStrategy(
+            sizes, n_total=n, seed=seed),
+        ground_truth_explore=True,
+    )
+    genomes, obj, mask, _labels = drive(campaign, labeler)
+    return genomes, obj, mask

@@ -12,11 +12,11 @@ For accelerator DSE, genes are (circuit index per slot) and optionally
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 
-from .pareto import crowding_distance, fast_non_dominated_sort, non_dominated_mask
+from .pareto import crowding_distance, fast_non_dominated_sort
 
 __all__ = ["NSGA2Config", "GenerationLog", "NSGA2Result", "nsga2"]
 
@@ -113,75 +113,36 @@ def _offspring(
 def nsga2(
     gene_sizes,
     evaluate: Callable[[np.ndarray], np.ndarray],
-    cfg: NSGA2Config = NSGA2Config(),
+    cfg: Optional[NSGA2Config] = None,
     *,
     init: Optional[np.ndarray] = None,
     callback: Optional[Callable[[GenerationLog], None]] = None,
     keep_history: bool = True,
 ) -> NSGA2Result:
-    """Run NSGA-II.  ``evaluate`` is called on full generations (vectorized
-    surrogate evaluation is the whole point of the paper)."""
-    gene_sizes = np.asarray(gene_sizes, dtype=np.int64)
-    rng = np.random.default_rng(cfg.seed)
-    cache: Dict[bytes, np.ndarray] = {}
-    n_evaluated = 0
+    """Run NSGA-II to completion.  ``evaluate`` is called on full
+    generations (vectorized surrogate evaluation is the whole point of
+    the paper).
 
-    def run_eval(genomes: np.ndarray) -> np.ndarray:
-        nonlocal n_evaluated
-        if not cfg.dedup:
-            n_evaluated += len(genomes)
-            return np.asarray(evaluate(genomes), dtype=np.float64)
-        keys = [g.tobytes() for g in genomes]
-        fresh_keys: list = []
-        fresh_rows: list = []
-        seen_in_batch = set()
-        for k, key in enumerate(keys):
-            if key not in cache and key not in seen_in_batch:
-                seen_in_batch.add(key)
-                fresh_keys.append(key)
-                fresh_rows.append(k)
-        if fresh_rows:
-            fresh = genomes[np.array(fresh_rows)]
-            vals = np.asarray(evaluate(fresh), dtype=np.float64)
-            n_evaluated += len(fresh_rows)
-            for key, v in zip(fresh_keys, vals):
-                cache[key] = v
-        return np.stack([cache[key] for key in keys])
+    This is now a thin drive-to-completion loop over the ask/tell
+    ``strategies.NSGA2Strategy`` — interruptible callers (the campaign
+    service) step the strategy themselves and snapshot between rounds."""
+    from .strategies.nsga2 import NSGA2Strategy
 
-    if init is None:
-        pop = rng.integers(0, gene_sizes[None, :], size=(cfg.pop_size, len(gene_sizes)))
-    else:
-        pop = np.asarray(init, dtype=np.int64)
-    obj = run_eval(pop)
-
-    history: List[GenerationLog] = []
-    parents, pobj, _ = _select_parents(pop, obj, cfg.n_parents)
-
-    for gen in range(cfg.n_generations):
-        fronts = fast_non_dominated_sort(pobj)
-        rank = np.zeros(len(pobj), dtype=np.int64)
-        cd = np.zeros(len(pobj))
-        for fi, front in enumerate(fronts):
-            rank[front] = fi
-            cd[front] = crowding_distance(pobj[front])
-        children = _offspring(
-            rng, parents, rank, cd, gene_sizes, cfg.pop_size, cfg
-        )
-        cobj = run_eval(children)
-        log = GenerationLog(gen, children, cobj, n_evaluated)
-        if keep_history:
-            history.append(log)
-        if callback is not None:
+    cfg = cfg if cfg is not None else NSGA2Config()
+    strat = NSGA2Strategy(gene_sizes, cfg, init=init,
+                          keep_history=keep_history or callback is not None)
+    while not strat.done:
+        genomes = strat.ask()
+        if len(genomes):
+            obj = np.asarray(evaluate(genomes), dtype=np.float64)
+        else:
+            # every candidate is cached: tell() rebuilds the generation
+            # from its cache and never reads the (empty) objectives
+            obj = np.zeros((0, 0))
+        log = strat.tell(genomes, obj)
+        if callback is not None and log is not None:
             callback(log)
-        # (mu + lambda) elitism over parents + children
-        allg = np.concatenate([parents, children], axis=0)
-        allo = np.concatenate([pobj, cobj], axis=0)
-        parents, pobj, _ = _select_parents(allg, allo, cfg.n_parents)
-
-    return NSGA2Result(
-        genomes=parents,
-        objectives=pobj,
-        front_mask=non_dominated_mask(pobj),
-        history=history,
-        n_evaluated=n_evaluated,
-    )
+    res = strat.result()
+    if not keep_history:
+        res.history = []
+    return res

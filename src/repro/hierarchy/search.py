@@ -51,6 +51,7 @@ class HierarchicalConfig:
     pipeline: str = "D"                   # feature pipeline, paper's winner
     qor_model: str = "random_forest"
     hw_model: str = "bayesian_ridge"
+    strategy: str = "nsga2"               # explorer for every stage campaign
     objectives: Tuple[str, ...] = ("qor", "energy")
     n_train: int = 48
     n_qor_samples: int = 2
@@ -72,6 +73,7 @@ class HierarchicalConfig:
             pipeline=self.pipeline,
             qor_model=self.qor_model,
             hw_model=self.hw_model,
+            strategy=self.strategy,
             objectives=tuple(self.objectives),
             n_train=self.n_train,
             n_qor_samples=self.n_qor_samples,
@@ -139,7 +141,7 @@ def _max_overlap(intervals: Sequence[Tuple[float, float]]) -> int:
 def run_hierarchical(
     pipeline: StagedPipeline,
     library: Optional[Library] = None,
-    cfg: HierarchicalConfig = HierarchicalConfig(),
+    cfg: Optional[HierarchicalConfig] = None,
     *,
     manager: Optional[CampaignManager] = None,
     stage_overrides: Optional[Sequence[Dict]] = None,
@@ -147,7 +149,11 @@ def run_hierarchical(
 ) -> HierarchicalResult:
     """Hierarchical search: concurrent per-stage campaigns -> composed
     front -> end-to-end verification.  Uses the given ``manager`` (and
-    its label store) or owns a temporary one."""
+    its label store) or owns a temporary one.  The per-stage campaigns
+    ride the manager's cooperative ask/tell stepping, so stages share
+    the campaign worker pool with everything else the service runs (and
+    ``cfg.strategy`` picks each stage's explorer)."""
+    cfg = cfg if cfg is not None else HierarchicalConfig()
     library = library or default_library()
     n_stages = len(pipeline.stages)
     overrides = list(stage_overrides or [])

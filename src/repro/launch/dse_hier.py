@@ -32,6 +32,11 @@ def main():
     ap.add_argument("--pop", type=int, default=24)
     ap.add_argument("--parents", type=int, default=12)
     ap.add_argument("--pipeline", default="D", choices=list("BCDEF"))
+    from ..core.strategies import available_strategies
+
+    ap.add_argument("--strategy", default="nsga2",
+                    choices=available_strategies(),
+                    help="explorer for every stage campaign")
     ap.add_argument("--qor-samples", type=int, default=2)
     ap.add_argument("--k-per-stage", type=int, default=12)
     ap.add_argument("--max-candidates", type=int, default=64)
@@ -52,6 +57,7 @@ def main():
     library = default_library()
     cfg = HierarchicalConfig(
         pipeline=args.pipeline,
+        strategy=args.strategy,
         n_train=args.n_train,
         n_qor_samples=args.qor_samples,
         rank_genes=args.rank_genes,

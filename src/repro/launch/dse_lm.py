@@ -33,6 +33,13 @@ def main():
     ap.add_argument("--pop", type=int, default=32)
     ap.add_argument("--parents", type=int, default=12)
     ap.add_argument("--pipeline", default="D", choices=list("BCDEF"))
+    from ..core.strategies import available_strategies
+
+    ap.add_argument("--strategy", default="nsga2",
+                    choices=available_strategies(),
+                    help="explorer: nsga2 (paper), bo (expected-"
+                         "improvement Bayesian optimization), random, or "
+                         "any registered custom strategy")
     ap.add_argument("--rank-genes", action="store_true",
                     help="beyond-paper: correction rank as a DSE axis")
     ap.add_argument("--store", default=None,
@@ -48,6 +55,7 @@ def main():
     lib = default_library()
     cfg = DSEConfig(
         pipeline=args.pipeline,
+        strategy=args.strategy,
         n_train=args.n_train,
         n_qor_samples=2,
         rank_genes=args.rank_genes,
@@ -80,7 +88,7 @@ def main():
               f"(hit rate {s['label_hit_rate']:.0%})")
         scheduler.shutdown()
 
-    print(f"\n[dse-lm] {accel.name}")
+    print(f"\n[dse-lm] {accel.name} (strategy={args.strategy})")
     print(f"  surrogate validation PCC: "
           + ", ".join(f"{k}={v:.3f}" for k, v in res.val_pcc.items()))
     print(f"  timings: " + ", ".join(

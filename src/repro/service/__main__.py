@@ -37,7 +37,13 @@ def main(argv=None):
                     help="genomes per process-pool chunk (default: "
                          "auto, ~2 chunks per worker)")
     ap.add_argument("--campaign-workers", type=int, default=2,
-                    help="concurrently running campaigns")
+                    help="campaign stepper threads (campaigns multiplex "
+                         "cooperatively, so many more campaigns than "
+                         "workers can be in flight)")
+    ap.add_argument("--snapshots", default="runs/service_snapshots.jsonl",
+                    help="campaign snapshot file: killed campaigns are "
+                         "resumable via POST /campaigns/<id>/resume after "
+                         "a restart ('' disables)")
     ap.add_argument("--hier-workers", type=int, default=1,
                     help="concurrently running hierarchical jobs (their "
                          "per-stage campaigns use the campaign workers)")
@@ -60,7 +66,13 @@ def main(argv=None):
         hier_workers=args.hier_workers,
         max_batch=args.max_batch,
         max_wait_s=args.max_wait_ms / 1e3,
+        snapshot_path=args.snapshots or None,
     )
+    if args.snapshots:
+        resumable = manager.snapshot_ids()
+        if resumable:
+            print(f"[service] {len(resumable)} resumable campaign(s): "
+                  + ", ".join(resumable))
     serve(manager, args.host, args.port, quiet=not args.verbose)
 
 

@@ -3,17 +3,26 @@
 Endpoints (JSON in/out):
 
     POST /campaigns              {spec fields}        -> {"id": ...}
+                                 {"strategy": "bo"} picks the explorer
+                                 (any core.strategies registry name);
                                  with {"hierarchical": true, "accel":
                                  <staged pipeline>, "stages": [...]} the
                                  job runs the hierarchical search (one
                                  concurrent campaign per stage, composed
                                  + end-to-end verified front)
-    GET  /campaigns              -> [{id, state, accel}, ...]
-    GET  /campaigns/<id>         -> status record
+    POST /campaigns/<id>/cancel  -> stop at the next tick boundary
+                                    (snapshot kept)
+    POST /campaigns/<id>/resume  -> continue a cancelled/failed/killed
+                                    campaign from its latest snapshot
+    GET  /campaigns              -> [{id, state, accel, strategy}, ...]
+    GET  /campaigns/<id>         -> status record; running campaigns
+                                    carry live "progress" (stage,
+                                    strategy, generation, labels spent)
     GET  /campaigns/<id>/result  -> summary (val_pcc, timings, front size)
     GET  /campaigns/<id>/front   -> the campaign's true Pareto front
     GET  /front?accel=<name>     -> merged non-dominated front over every
                                     completed campaign for that accelerator
+    GET  /strategies             -> registered explorer names
     GET  /stats                  -> store/scheduler/surrogate counters
     GET  /healthz                -> {"ok": true}
 
@@ -80,6 +89,10 @@ class _Handler(BaseHTTPRequestHandler):
         try:
             if path == "/healthz":
                 return self._send({"ok": True})
+            if path == "/strategies":
+                from ..core.strategies import available_strategies
+
+                return self._send({"strategies": available_strategies()})
             if path == "/stats":
                 return self._send(mgr.stats())
             if path == "/campaigns":
@@ -110,6 +123,21 @@ class _Handler(BaseHTTPRequestHandler):
 
     def do_POST(self):  # noqa: N802 - BaseHTTPRequestHandler API
         path, _ = self._route()
+        m = re.fullmatch(r"/campaigns/([\w-]+)/(cancel|resume)", path)
+        if m:
+            cid, action = m.group(1), m.group(2)
+            try:
+                if action == "cancel":
+                    self.manager.cancel(cid)
+                    return self._send({"id": cid, "state": "cancelling"})
+                self.manager.resume(cid)
+                return self._send({"id": cid, "state": "queued"}, 202)
+            except KeyError:
+                return self._error(404, "unknown campaign")
+            except RuntimeError as exc:
+                return self._error(409, str(exc))
+            except Exception as exc:  # noqa: BLE001 - JSON 500
+                return self._error(500, f"{type(exc).__name__}: {exc}")
         if path != "/campaigns":
             return self._error(404, f"no route {path}")
         try:
@@ -182,6 +210,15 @@ class Client:
 
     def status(self, cid: str) -> Dict:
         return self._req(f"/campaigns/{cid}")
+
+    def cancel(self, cid: str) -> Dict:
+        return self._req(f"/campaigns/{cid}/cancel", {})
+
+    def resume(self, cid: str) -> Dict:
+        return self._req(f"/campaigns/{cid}/resume", {})
+
+    def strategies(self) -> list:
+        return self._req("/strategies")["strategies"]
 
     def result(self, cid: str) -> Dict:
         return self._req(f"/campaigns/{cid}/result")

@@ -1,8 +1,17 @@
 """Campaign manager + warm surrogate registry.
 
-A *campaign* is one ``run_dse`` invocation owned by the service: its
-ground-truth labeling runs through the shared ``EvalScheduler`` (store
-reuse + in-flight dedup + coalesced batches) and its surrogate fits go
+A *campaign* is one three-stage DSE owned by the service.  It is NOT a
+blocking ``run_dse`` call on a dedicated thread: the manager steps
+``core.strategies.Campaign`` state machines cooperatively — one executor
+task per tick (a label request, one ask/tell strategy round, or one
+label delivery) — so N campaigns multiplex over a small worker pool and
+a campaign whose ground truth is in flight holds no thread at all.
+Every tick boundary snapshots the campaign state, which is what backs
+``cancel``/``resume`` (``POST /campaigns/<id>/resume`` continues a
+killed campaign, cross-process when ``snapshot_path`` is set).
+
+Ground-truth labeling runs through the shared ``EvalScheduler`` (store
+reuse + in-flight dedup + coalesced batches) and surrogate fits go
 through the ``SurrogateRegistry`` (warm fitted models keyed by
 ``(eval context, pipeline, objective, model, seed)``).
 
@@ -30,12 +39,12 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from ..core.dse import DSEConfig, DSEResult, run_dse
+from ..core.dse import DSEConfig, DSEResult
 from ..core.nsga2 import NSGA2Config
 from ..core.pareto import non_dominated_mask
 from ..core.surrogates import make
 from .scheduler import EvalScheduler
-from .store import EvalContext, InMemoryLabelStore, LabelStore
+from .store import LABEL_KEYS, EvalContext, InMemoryLabelStore, LabelStore
 
 __all__ = [
     "CampaignSpec",
@@ -132,6 +141,7 @@ class CampaignSpec:
     pipeline: str = "D"
     qor_model: str = "random_forest"
     hw_model: str = "bayesian_ridge"
+    strategy: str = "nsga2"         # explorer (core.strategies registry)
     objectives: Tuple[str, ...] = ("qor", "energy")
     n_train: int = 80
     n_qor_samples: int = 4
@@ -155,6 +165,13 @@ class CampaignSpec:
         malformed sizes with a ValueError (HTTP 400) instead of letting
         the campaign fail asynchronously in a worker thread."""
         _validate_sizes(self)
+        from ..core.strategies import available_strategies
+
+        if self.strategy not in available_strategies():
+            raise ValueError(
+                f"unknown strategy {self.strategy!r}; known: "
+                f"{available_strategies()}"
+            )
         make_accelerator(self.accel)  # raises ValueError if unknown
 
     def dse_config(self) -> DSEConfig:
@@ -162,6 +179,7 @@ class CampaignSpec:
             pipeline=self.pipeline,
             hw_model=self.hw_model,
             qor_model=self.qor_model,
+            strategy=self.strategy,
             objectives=tuple(self.objectives),
             n_train=self.n_train,
             n_qor_samples=self.n_qor_samples,
@@ -224,6 +242,7 @@ class HierarchicalSpec:
     pipeline: str = "D"
     qor_model: str = "random_forest"
     hw_model: str = "bayesian_ridge"
+    strategy: str = "nsga2"           # explorer for every stage campaign
     objectives: Tuple[str, ...] = ("qor", "energy")
     n_train: int = 48
     n_qor_samples: int = 2
@@ -392,13 +411,20 @@ class _Campaign:
     id: str
     spec: object                     # CampaignSpec | HierarchicalSpec
     kind: str = "dse"                # dse | hierarchical
-    state: str = "queued"            # queued | running | done | failed
+    state: str = "queued"            # queued | running | done | failed | cancelled
     submitted_at: float = field(default_factory=time.time)
     started_at: Optional[float] = None
     finished_at: Optional[float] = None
     error: Optional[str] = None
     result: Optional[DSEResult] = None
     done_evt: threading.Event = field(default_factory=threading.Event)
+    # cooperative-stepping machinery (kind == "dse" only)
+    driver: Optional[object] = None          # core.strategies.Campaign
+    ctx: Optional[EvalContext] = None
+    inbox: Optional[Tuple] = None            # (LabelRequest, labels) to deliver
+    restore_state: Optional[Dict] = None     # snapshot to install on build
+    cancel_requested: bool = False
+    steps: int = 0
 
 
 class _CompactResult:
@@ -444,6 +470,8 @@ class CampaignManager:
         max_wait_s: float = 0.02,
         keep_results: int = 128,
         keep_campaigns: int = 2048,
+        snapshot_every: int = 1,
+        snapshot_path: Optional[str] = None,
     ):
         self.store = store if store is not None else InMemoryLabelStore()
         self.scheduler = scheduler or EvalScheduler(
@@ -453,6 +481,10 @@ class CampaignManager:
             chunk_size=chunk_size,
         )
         self.registry = SurrogateRegistry()
+        # campaign workers STEP campaigns cooperatively: one executor
+        # task is one tick (a label request, one strategy round, or one
+        # label delivery), so N campaigns multiplex over few threads and
+        # a campaign waiting on ground truth holds no thread at all
         self._pool = ThreadPoolExecutor(
             campaign_workers, thread_name_prefix="campaign"
         )
@@ -469,6 +501,19 @@ class CampaignManager:
         # beyond keep_campaigns, records are dropped entirely
         self.keep_results = int(keep_results)
         self.keep_campaigns = int(keep_campaigns)
+        # snapshots: latest per-campaign state at tick boundaries, for
+        # POST /campaigns/<id>/resume.  In-memory always; with
+        # snapshot_path also appended as JSON lines (last record per id
+        # wins on replay), so a campaign killed WITH its process can be
+        # resumed by a fresh manager pointed at the same file
+        self.snapshot_every = max(1, int(snapshot_every))
+        self.snapshot_path = snapshot_path
+        self._snapshots: Dict[str, Dict] = {}
+        self._snap_lock = threading.Lock()
+        self._snap_fh = None
+        self._snap_lines = 0
+        if snapshot_path:
+            self._replay_snapshots(snapshot_path)
 
     # ------------------------------------------------------------------
     def _admit(self, spec, kind: str) -> _Campaign:
@@ -487,7 +532,7 @@ class CampaignManager:
 
     def submit(self, spec: CampaignSpec) -> str:
         c = self._admit(spec, "dse")
-        self._pool.submit(self._run, c)
+        self._enqueue(c)
         return c.id
 
     def submit_hierarchical(self, spec: HierarchicalSpec) -> str:
@@ -499,37 +544,238 @@ class CampaignManager:
         self._hier_pool.submit(self._run_hier, c)
         return c.id
 
-    def _run(self, c: _Campaign) -> None:
-        c.state = "running"
-        c.started_at = time.time()
+    # ------------------------------------------------------------------
+    # cooperative stepping: one executor task == one campaign tick
+    # ------------------------------------------------------------------
+    def _enqueue(self, c: _Campaign) -> None:
+        self._pool.submit(self._step, c)
+
+    def _build_driver(self, c: _Campaign) -> None:
+        from ..core.acl.library import default_library
+        from ..core.strategies.campaign import Campaign as DseCampaign
+
+        spec = c.spec
+        accel = make_accelerator(spec.accel)
+        library = default_library()
+        c.ctx = EvalContext(
+            accel, library,
+            rank_genes=spec.rank_genes,
+            n_qor_samples=spec.n_qor_samples,
+        )
+        provider = self.registry.provider(c.ctx.fingerprint, spec)
+        c.driver = DseCampaign(
+            accel, library, spec.dse_config(), surrogate_provider=provider,
+        )
+        if c.restore_state is not None:
+            c.driver.restore(c.restore_state)
+            c.restore_state = None
+
+    def _step(self, c: _Campaign) -> None:
+        """One cooperative tick.  Re-enqueues itself while runnable;
+        parks (holding NO thread) while labels are in flight — the
+        gather callback re-enqueues on delivery."""
         try:
-            spec = c.spec
-            accel = make_accelerator(spec.accel)
-            from ..core.acl.library import default_library
-
-            library = default_library()
-            ctx = EvalContext(
-                accel, library,
-                rank_genes=spec.rank_genes,
-                n_qor_samples=spec.n_qor_samples,
-            )
-
-            def labeler(genomes):
-                return self.scheduler.label(ctx, genomes, campaign=c.id)
-
-            provider = self.registry.provider(ctx.fingerprint, spec)
-            c.result = run_dse(
-                accel, library, spec.dse_config(),
-                labeler=labeler, surrogate_provider=provider,
-            )
-            c.state = "done"
+            if c.state == "queued":
+                c.state = "running"
+                if c.started_at is None:
+                    c.started_at = time.time()
+            if c.cancel_requested:
+                self._save_snapshot(c)
+                c.state = "cancelled"
+                c.finished_at = time.time()
+                c.done_evt.set()
+                return
+            if c.driver is None:
+                self._build_driver(c)
+            if c.inbox is not None:
+                req, labels = c.inbox
+                c.inbox = None
+                c.driver.deliver(req, labels)
+                self._save_snapshot(c)
+            elif not c.driver.done:
+                req = c.driver.step()
+                if req is not None:
+                    self._dispatch_labels(c, req)
+                    return
+                c.steps += 1
+                if c.steps % self.snapshot_every == 0:
+                    self._save_snapshot(c)
+            if c.driver.done:
+                c.result = c.driver.result()
+                c.state = "done"
+                self._drop_snapshot(c.id)
+                c.finished_at = time.time()
+                c.done_evt.set()
+                self._evict()
+            else:
+                self._enqueue(c)
         except Exception as exc:  # noqa: BLE001 - campaign isolation
-            c.state = "failed"
-            c.error = f"{type(exc).__name__}: {exc}"
-        finally:
-            c.finished_at = time.time()
-            c.done_evt.set()
-            self._evict()
+            self._fail(c, exc)
+
+    def _dispatch_labels(self, c: _Campaign, req) -> None:
+        """Fan the request out through the scheduler and park the
+        campaign; the last-resolved future re-enqueues it."""
+        from .scheduler import gather_futures
+
+        futures = self.scheduler.submit(c.ctx, req.genomes, campaign=c.id)
+
+        def _delivered(recs, exc):
+            # runs as a Future done-callback, where raised exceptions are
+            # swallowed — every failure must route through _fail or the
+            # campaign would park in "running" forever
+            try:
+                if exc is not None:
+                    self._fail(c, exc)
+                    return
+                labels = {
+                    k: np.array([float(r[k]) for r in recs])
+                    for k in LABEL_KEYS
+                }
+                c.inbox = (req, labels)
+                self._enqueue(c)
+            except Exception as cb_exc:  # noqa: BLE001 - campaign isolation
+                self._fail(c, cb_exc)
+
+        gather_futures(futures, _delivered)
+
+    def _fail(self, c: _Campaign, exc: BaseException) -> None:
+        c.state = "failed"
+        c.error = f"{type(exc).__name__}: {exc}"
+        c.finished_at = time.time()
+        c.done_evt.set()
+        self._evict()
+
+    # ------------------------------------------------------------------
+    # cancel / resume
+    # ------------------------------------------------------------------
+    def cancel(self, cid: str) -> None:
+        """Request cancellation; takes effect at the campaign's next
+        tick boundary (its snapshot is kept for ``resume``)."""
+        c = self._get(cid)
+        if c.kind != "dse":
+            raise RuntimeError(
+                f"campaign {cid} is {c.kind}; only dse campaigns cancel "
+                f"(cancel its stage campaigns instead)"
+            )
+        if c.state in ("done", "failed", "cancelled"):
+            raise RuntimeError(f"campaign {cid} already {c.state}")
+        c.cancel_requested = True
+
+    def resume(self, cid: str) -> str:
+        """Continue a cancelled/failed campaign from its latest snapshot
+        (same id).  Unknown ids are looked up in the persistent snapshot
+        file, so a campaign killed with its process resumes on a fresh
+        manager pointed at the same ``snapshot_path``.  Ground truth the
+        campaign re-requests is answered by the label store, so the
+        replayed portion is cheap."""
+        with self._lock:
+            c = self._campaigns.get(cid)
+            snap = self._snapshots.get(cid)
+        if c is None:
+            if snap is None:
+                raise KeyError(cid)
+            spec = CampaignSpec.from_dict(snap["spec"])
+            with self._lock:
+                c = _Campaign(id=cid, spec=spec, kind="dse")
+                self._campaigns[cid] = c
+        else:
+            if c.kind != "dse":
+                raise RuntimeError(f"campaign {cid} is {c.kind}; "
+                                   f"only dse campaigns resume")
+            if c.state not in ("cancelled", "failed"):
+                raise RuntimeError(
+                    f"campaign {cid} is {c.state}; only cancelled/failed "
+                    f"campaigns resume"
+                )
+        c.state = "queued"
+        c.error = None
+        c.finished_at = None
+        c.cancel_requested = False
+        c.inbox = None
+        c.driver = None          # rebuilt from the snapshot on next tick
+        c.restore_state = snap["campaign"] if snap is not None else None
+        c.done_evt = threading.Event()
+        self._enqueue(c)
+        return cid
+
+    # ------------------------------------------------------------------
+    # snapshots
+    # ------------------------------------------------------------------
+    def _append_snap(self, rec: Dict) -> None:
+        """Append one snapshot record (called under _snap_lock).  Every
+        tick appends the FULL campaign state, so the log is rewritten
+        down to one line per live campaign whenever it holds >4x as many
+        lines as ids (the JsonlLabelStore compaction idiom) — without
+        this, snapshot files would grow quadratically per campaign and
+        accumulate across service runs forever."""
+        import json
+        import os
+
+        if self._snap_fh is None:
+            d = os.path.dirname(os.path.abspath(self.snapshot_path))
+            os.makedirs(d, exist_ok=True)
+            self._snap_fh = open(self.snapshot_path, "a")
+        self._snap_fh.write(json.dumps(rec, default=float) + "\n")
+        self._snap_fh.flush()
+        self._snap_lines += 1
+        if self._snap_lines > max(16, 4 * len(self._snapshots)):
+            self._snap_fh.close()
+            tmp = self.snapshot_path + ".compact.tmp"
+            with open(tmp, "w") as f:
+                for snap in self._snapshots.values():
+                    f.write(json.dumps(snap, default=float) + "\n")
+            os.replace(tmp, self.snapshot_path)
+            self._snap_fh = open(self.snapshot_path, "a")
+            self._snap_lines = len(self._snapshots)
+
+    def _save_snapshot(self, c: _Campaign) -> None:
+        if c.driver is None or c.driver.done:
+            return
+        snap = {
+            "id": c.id,
+            "kind": c.kind,
+            "t": time.time(),
+            "spec": {**asdict(c.spec),
+                     "objectives": list(c.spec.objectives)},
+            "campaign": c.driver.state(),
+        }
+        with self._snap_lock:
+            self._snapshots[c.id] = snap
+            if self.snapshot_path:
+                self._append_snap(snap)
+
+    def _drop_snapshot(self, cid: str) -> None:
+        with self._snap_lock:
+            dropped = self._snapshots.pop(cid, None) is not None
+            if dropped and self.snapshot_path:
+                # tombstone so a later replay does not resurrect a
+                # finished campaign as resumable
+                self._append_snap({"id": cid, "done": True})
+
+    def _replay_snapshots(self, path: str) -> None:
+        import json
+        import os
+
+        if not os.path.exists(path):
+            return
+        with open(path) as f:
+            for line in f:
+                if not line.endswith("\n"):
+                    break              # torn tail from a killed writer
+                self._snap_lines += 1
+                try:
+                    snap = json.loads(line)
+                    if snap.get("done"):
+                        self._snapshots.pop(snap["id"], None)
+                    else:
+                        self._snapshots[snap["id"]] = snap   # last wins
+                except (json.JSONDecodeError, KeyError):
+                    continue
+
+    def snapshot_ids(self) -> List[str]:
+        """Campaign ids with a resumable snapshot."""
+        with self._snap_lock:
+            return sorted(self._snapshots)
 
     def _run_hier(self, c: _Campaign) -> None:
         c.state = "running"
@@ -600,6 +846,13 @@ class CampaignManager:
             "finished_at": c.finished_at,
             "error": c.error,
         }
+        # live progress from the stepped campaign state machine (stage,
+        # strategy, generation, labels requested) — not just queued/done
+        if c.driver is not None and c.result is None:
+            try:
+                out["progress"] = c.driver.progress()
+            except Exception:  # noqa: BLE001 - progress is best-effort
+                pass
         sched = self.scheduler.campaign_stats(c.id)
         if sched:
             out["labeling"] = sched
@@ -623,7 +876,8 @@ class CampaignManager:
     def list_campaigns(self) -> List[Dict]:
         with self._lock:
             return [{"id": c.id, "state": c.state, "kind": c.kind,
-                     "accel": c.spec.accel}
+                     "accel": c.spec.accel,
+                     "strategy": getattr(c.spec, "strategy", None)}
                     for c in self._campaigns.values()]
 
     def result(self, cid: str) -> DSEResult:
@@ -704,3 +958,7 @@ class CampaignManager:
         self._hier_pool.shutdown(wait=wait)
         self._pool.shutdown(wait=wait)
         self.scheduler.shutdown(wait=wait)
+        with self._snap_lock:
+            if self._snap_fh is not None:
+                self._snap_fh.close()
+                self._snap_fh = None

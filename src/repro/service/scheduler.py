@@ -40,7 +40,35 @@ import numpy as np
 
 from .store import LABEL_KEYS, EvalContext, LabelStore
 
-__all__ = ["EvalScheduler"]
+__all__ = ["EvalScheduler", "gather_futures"]
+
+
+def gather_futures(futures: List[Future], callback) -> None:
+    """Invoke ``callback(recs, exc)`` exactly once when every future has
+    resolved — the non-blocking counterpart of ``[f.result() for f in
+    futures]`` that lets a campaign release its worker thread while its
+    labels are in flight.  ``recs`` is the in-order result list (None on
+    failure, with ``exc`` the first exception encountered)."""
+    if not futures:
+        callback([], None)
+        return
+    lock = threading.Lock()
+    remaining = [len(futures)]
+
+    def _one_done(_f: Future) -> None:
+        with lock:
+            remaining[0] -= 1
+            if remaining[0]:
+                return
+        try:
+            recs = [f.result() for f in futures]
+        except Exception as exc:  # noqa: BLE001 - surfaced via callback
+            callback(None, exc)
+            return
+        callback(recs, None)
+
+    for f in futures:
+        f.add_done_callback(_one_done)
 
 
 @dataclass
