@@ -119,13 +119,20 @@ def _fresh_ctx(name, n_qor):
 
 
 def bench_per_genome_thread(name, genomes, n_qor):
-    """Seed-engine baseline: per-genome ground truth on thread workers."""
+    """Seed-engine baseline: per-genome ground truth on thread workers.
+    Structural compile keying and the shared compile cache are disabled
+    (and the engine reset) so the baseline pays exactly what the seed
+    engine paid — without this, the new engine's process-wide cache
+    would answer for compiles another backend already did."""
     import repro.core.features.synth as synth
     import repro.kernels.approx_matmul.ops as ops
 
     ctx = _fresh_ctx(name, n_qor)
     ops.LEGACY_EMBED_TABLES, fast = True, synth.FAST_CODEGEN
+    struct = synth.STRUCTURAL_KEYS
     synth.FAST_CODEGEN = False
+    synth.STRUCTURAL_KEYS = False
+    synth.reset_fast_codegen()
     try:
         with ThreadPoolExecutor(WORKERS) as pool:
             t0 = time.perf_counter()
@@ -134,12 +141,17 @@ def bench_per_genome_thread(name, genomes, n_qor):
     finally:
         ops.LEGACY_EMBED_TABLES = False
         synth.FAST_CODEGEN = fast
+        synth.STRUCTURAL_KEYS = struct
     labels = {k: np.concatenate([o[k] for o in outs]) for k in DET_KEYS}
     return labels, wall
 
 
 def bench_batched_thread(name, genomes, n_qor):
-    """Batched engine, in-process: one ground-truth call for the batch."""
+    """Batched engine, in-process: one ground-truth call for the batch
+    (cold shared compile cache — backends must not feed each other)."""
+    import repro.core.features.synth as synth
+
+    synth.reset_fast_codegen()
     ctx = _fresh_ctx(name, n_qor)
     t0 = time.perf_counter()
     labels = ctx.ground_truth(genomes)

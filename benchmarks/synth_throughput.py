@@ -1,0 +1,402 @@
+"""Structural synthesis engine throughput -> BENCH_synth.json.
+
+XLA synthesis (the Vivado analogue) is the un-amortized half of ground-
+truth labeling: PR 3 batched the QoR simulation, but every compile was
+still paid per circuit-identity, per evaluation context, per process.
+This benchmark measures what the PR 5 structural engine changes, on two
+workloads per accelerator:
+
+  * ``context_sweep`` (the headline) — the SAME designs synthesized
+    under several evaluation contexts, the service's standard pattern:
+    campaigns search at ``n_qor_samples=2`` (the hierarchy/LM configs)
+    and report at ``n_qor_samples=4`` (the flat default), and fronts are
+    re-evaluated under fresh QoR input draws for robustness.  The PR-4
+    engine keeps its compile cache per ``EvalContext``, so every context
+    recompiles every design from zero; the structural engine shares one
+    compile pool across all of them.
+  * ``single_context_random`` (the honest hard case) — one context, one
+    batch of fresh random genomes.  Random 25-slot genomes rarely share
+    a structural signature, so this measures engine overhead, not cache
+    magic; expect ~1x.
+
+Engines compared on identical synthesis streams:
+
+  * ``pr4_serial``          — per-genome ``synthesize_variant`` loop,
+    identity-keyed per-context dict cache, structural keying off (the
+    PR-4 engine, with its lean trace and guarded fast codegen).
+  * ``batched_structural``  — ``synthesize_batch`` + one persistent
+    ``JsonlSynthCache`` shared by every context.
+  * ``warm_persistent``     — the same stream re-run in a FRESH PROCESS
+    against the same cache file: must do ZERO compiles.
+
+Hardware labels must be byte-identical across all three, and the (QoR,
+energy) Pareto fronts they induce must match the default engine's.
+A thread-pool compile probe (``compile_workers=2``) is also recorded:
+on jaxlib 0.4.x CPU, compilation serializes internally, so the measured
+ratio documents why the engine defaults to serial compiles.
+
+Run:  PYTHONPATH=src python benchmarks/synth_throughput.py [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from common import emit, section  # noqa: E402
+
+HW_KEYS = ("flops", "hbm_bytes", "latency", "energy")
+DET_KEYS = ("qor",) + HW_KEYS
+
+# the repo's real evaluation contexts for one accelerator: search config
+# (n_qor=2: hierarchy stages, LM drivers), reporting config (n_qor=4:
+# the flat campaign default), and a robustness re-draw of each (fresh
+# QoR inputs, same designs).  Only (n_qor_samples, qor_seed) vary — the
+# synthesis side is identical, which is exactly the point.
+CONTEXTS = ((2, 1234), (4, 1234), (2, 7), (4, 7))
+
+
+def _accel(name):
+    from repro.service import make_accelerator
+
+    return make_accelerator(name)
+
+
+def _designs(accel, library, n, seed):
+    rng = np.random.default_rng(seed)
+    sizes = accel.gene_sizes(library)
+    return rng.integers(0, sizes[None, :], size=(n, len(sizes)))
+
+
+def _variants(accel, library, genomes):
+    return [accel.decode(g, library) for g in genomes]
+
+
+def _front(labels):
+    from repro.core.dse import _objective_matrix
+    from repro.core.pareto import non_dominated_mask
+
+    obj = _objective_matrix(labels, ("qor", "energy"))
+    return obj[non_dominated_mask(obj)]
+
+
+def warm_fast_codegen(accel, library):
+    """Settle the module-global fast-codegen verdict for this graph
+    family OUTSIDE the measurements (throwaway designs, throwaway
+    cache): a long-lived service holds its verdicts for the process
+    lifetime, so steady-state is the honest operating point for BOTH
+    engines — and it is symmetric, the PR-3 ``warm_library`` idiom.
+    Cold-compile measurements below must therefore NOT reset the
+    engine; their cache isolation comes from explicit per-run caches."""
+    from repro.core.features import synth
+
+    synth.reset_fast_codegen()
+    w = _designs(accel, library, synth._FAST_VERIFY_SAMPLES + 1, seed=1717)
+    synth.synthesize_batch(
+        accel, _variants(accel, library, w), synth_cache=synth.SynthCache(),
+    )
+
+
+def run_pr4_serial(accel, library, genomes, n_contexts):
+    """The PR-4 engine on the context-sweep stream: a fresh identity
+    cache per context (EvalContext._synth_cache semantics), serial
+    per-genome loop, structural tier off."""
+    from repro.core.features import synth
+
+    keep = synth.STRUCTURAL_KEYS
+    synth.STRUCTURAL_KEYS = False
+    variants = _variants(accel, library, genomes)
+    try:
+        recs = []
+        t0 = time.perf_counter()
+        for _ in range(n_contexts):
+            # PR-4 semantics: compile reuse stops at the context border —
+            # a fresh identity cache per context, and an ISOLATED shared
+            # tier (the process-wide cache would otherwise leak the new
+            # engine's cross-context sharing into the baseline)
+            ctx_cache = {}
+            isolated = synth.SynthCache()
+            for circuits, ranks in variants:
+                recs.append(synth.synthesize_variant(
+                    accel, circuits, ranks, cache=ctx_cache,
+                    synth_cache=isolated,
+                ))
+        wall = time.perf_counter() - t0
+    finally:
+        synth.STRUCTURAL_KEYS = keep
+    return recs, wall
+
+
+def run_batched_structural(accel, library, genomes, n_contexts, cache_path):
+    """The structural engine on the same stream: synthesize_batch per
+    context batch, ONE persistent cache shared across contexts."""
+    from repro.core.features import synth
+
+    cache = synth.JsonlSynthCache(cache_path)
+    variants = _variants(accel, library, genomes)
+    recs = []
+    t0 = time.perf_counter()
+    for _ in range(n_contexts):
+        recs.extend(synth.synthesize_batch(
+            accel, variants, synth_cache=cache,
+        ))
+    wall = time.perf_counter() - t0
+    stats = cache.stats()
+    cache.close()
+    return recs, wall, stats
+
+
+def warm_rerun_in_subprocess(accel_name, n_designs, seed, n_contexts,
+                             cache_path, out_path):
+    """Re-run the structural stream in a FRESH process against the same
+    cache file — the process-restart half of the warm claim."""
+    cmd = [sys.executable, os.path.abspath(__file__),
+           "--_warm-worker", accel_name, str(n_designs), str(seed),
+           str(n_contexts), cache_path, out_path]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (
+        os.path.join(os.path.dirname(__file__), "..", "src")
+        + os.pathsep + env.get("PYTHONPATH", "")
+    )
+    subprocess.run(cmd, check=True, env=env)
+    with open(out_path) as f:
+        return json.load(f)
+
+
+def _warm_worker(argv):
+    accel_name, n, seed, n_contexts, cache_path, out_path = argv
+    from repro.core.acl.library import default_library
+    from repro.service.workers import warm_library
+
+    library = default_library()
+    warm_library(library)   # steady-state, as in the parent's streams
+    accel = _accel(accel_name)
+    genomes = _designs(accel, library, int(n), int(seed))
+    recs, wall, stats = run_batched_structural(
+        accel, library, genomes, int(n_contexts), cache_path,
+    )
+    with open(out_path, "w") as f:
+        json.dump({
+            "wall_s": wall,
+            "compiles": stats["compiles"],
+            "hw": {k: [r[k] for r in recs] for k in HW_KEYS},
+        }, f)
+
+
+def probe_threaded_compiles(accel, library, genomes):
+    """compile_workers=2 vs serial on one cold batch (fresh caches)."""
+    from repro.core.features import synth
+
+    variants = _variants(accel, library, genomes)
+    walls = {}
+    for tag, workers in (("serial", 1), ("threads2", 2)):
+        synth.reset_fast_codegen()
+        t0 = time.perf_counter()
+        synth.synthesize_batch(
+            accel, variants, synth_cache=synth.SynthCache(),
+            compile_workers=workers,
+        )
+        walls[tag] = time.perf_counter() - t0
+    return walls
+
+
+def main():
+    if len(sys.argv) > 1 and sys.argv[1] == "--_warm-worker":
+        _warm_worker(sys.argv[2:])
+        return
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny designs/context counts (CI: exercise every "
+                         "engine path, don't trust the ratios)")
+    ap.add_argument("-n", type=int, default=None, help="designs per sweep")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_synth.json"))
+    args = ap.parse_args()
+
+    from repro.core.acl.library import default_library
+    from repro.core.features import synth
+    from repro.service import EvalContext
+    from repro.service.workers import warm_library
+
+    library = default_library()
+    warm_library(library)
+
+    G = args.n or (2 if args.smoke else 8)
+    contexts = CONTEXTS[:2] if args.smoke else CONTEXTS
+    S = len(contexts)
+
+    report = {
+        "designs": G, "contexts": S, "rounds": (1 if args.smoke else 2),
+        "context_configs": [list(c) for c in contexts],
+        "smoke": bool(args.smoke),
+        "machine": {"os_cpu_count": os.cpu_count()},
+        "engine": {
+            "structural_keys": synth.STRUCTURAL_KEYS,
+            "fast_codegen": synth.FAST_CODEGEN,
+            "verify_samples": synth._STRUCT_VERIFY_SAMPLES,
+        },
+        "workloads": {},
+    }
+
+    for name in ("gaussian3x3", "smoothed_dct"):
+        accel = _accel(name)
+        genomes = _designs(accel, library, G, seed=5)
+        labels = S * G
+
+        rounds = 1 if args.smoke else 2
+        section(f"{name}: context sweep — {S} contexts x {G} designs "
+                f"x {rounds} interleaved rounds")
+        warm_fast_codegen(accel, library)
+        with tempfile.TemporaryDirectory() as tdir:
+            # engines measured INTERLEAVED (shared hosts drift); cold
+            # means cold: a fresh cache file per round
+            base_walls, new_walls = [], []
+            for rnd in range(rounds):
+                cache_path = os.path.join(tdir, f"synth_cache{rnd}.jsonl")
+                base_recs, base_wall = run_pr4_serial(
+                    accel, library, genomes, S)
+                base_walls.append(base_wall)
+                new_recs, new_wall, cold_stats = run_batched_structural(
+                    accel, library, genomes, S, cache_path)
+                new_walls.append(new_wall)
+            base_wall = float(np.median(base_walls))
+            new_wall = float(np.median(new_walls))
+            emit(f"synth.{name}.pr4_serial",
+                 base_wall / labels * 1e6, f"{labels} labels")
+            emit(f"synth.{name}.batched_structural",
+                 new_wall / labels * 1e6,
+                 f"{cold_stats['compiles']} compiles")
+
+            hw_identical = all(
+                a[k] == b[k]
+                for a, b in zip(base_recs, new_recs) for k in HW_KEYS
+            )
+
+            warm = warm_rerun_in_subprocess(
+                name, G, 5, S, cache_path,
+                os.path.join(tdir, "warm.json"))
+            emit(f"synth.{name}.warm_persistent",
+                 warm["wall_s"] / labels * 1e6,
+                 f"{warm['compiles']} compiles")
+            warm_identical = all(
+                [r[k] for r in new_recs] == warm["hw"][k] for k in HW_KEYS
+            )
+
+        section(f"{name}: single-context random batch (hard case)")
+        hard = _designs(accel, library, G, seed=99)
+        hard_base, hard_base_wall = run_pr4_serial(accel, library, hard, 1)
+        t0 = time.perf_counter()
+        hard_new = synth.synthesize_batch(
+            accel, _variants(accel, library, hard),
+            synth_cache=synth.SynthCache(),
+        )
+        hard_new_wall = time.perf_counter() - t0
+        hard_identical = all(
+            a[k] == b[k] for a, b in zip(hard_base, hard_new)
+            for k in HW_KEYS
+        )
+        emit(f"synth.{name}.single_context_x", 0.0,
+             f"{hard_base_wall / hard_new_wall:.2f}x")
+
+        # full labels + fronts once per engine (context 0), byte-compared
+        # (resets the engine, so it runs AFTER every timed measurement)
+        n_qor, qor_seed = contexts[0]
+        synth.reset_fast_codegen()
+        keep = synth.STRUCTURAL_KEYS
+        synth.STRUCTURAL_KEYS = False
+        try:
+            ref_labels = EvalContext(
+                accel, library, n_qor_samples=n_qor, qor_seed=qor_seed,
+            ).ground_truth(genomes)
+        finally:
+            synth.STRUCTURAL_KEYS = keep
+        synth.reset_fast_codegen()
+        new_labels = EvalContext(
+            accel, library, n_qor_samples=n_qor, qor_seed=qor_seed,
+        ).ground_truth(genomes)
+        labels_identical = all(
+            np.array_equal(ref_labels[k], new_labels[k]) for k in DET_KEYS
+        )
+        front_identical = bool(np.array_equal(
+            _front(ref_labels), _front(new_labels)))
+
+        threaded = probe_threaded_compiles(accel, library, hard)
+
+        report["workloads"][name] = {
+            "context_sweep": {
+                "labels": labels,
+                "per_label_s": {
+                    "pr4_serial": base_wall / labels,
+                    "batched_structural": new_wall / labels,
+                    "warm_persistent": warm["wall_s"] / labels,
+                },
+                "cold_compiles": {
+                    "pr4_serial": S * G,
+                    "batched_structural": cold_stats["compiles"],
+                },
+                "cold_speedup_x": base_wall / new_wall,
+                "warm_compiles": warm["compiles"],
+                "warm_speedup_x": base_wall / warm["wall_s"],
+                "cold_cache_stats": cold_stats,
+                "hw_labels_identical": bool(hw_identical),
+                "warm_labels_identical": bool(warm_identical),
+            },
+            "single_context_random": {
+                "labels": G,
+                "per_label_s": {
+                    "pr4_serial": hard_base_wall / G,
+                    "batched_structural": hard_new_wall / G,
+                },
+                "speedup_x": hard_base_wall / hard_new_wall,
+                "hw_labels_identical": bool(hard_identical),
+            },
+            "threaded_compile_probe": {
+                "serial_s": threaded["serial"],
+                "threads2_s": threaded["threads2"],
+                "threads2_speedup_x":
+                    threaded["serial"] / threaded["threads2"],
+                "note": "jaxlib 0.4.x CPU serializes compilation; the "
+                        "engine therefore defaults to serial compiles "
+                        "(REPRO_SYNTH_COMPILE_WORKERS overrides)",
+            },
+            "labels_identical": bool(labels_identical),
+            "front_identical": bool(front_identical),
+        }
+        sweep = report["workloads"][name]["context_sweep"]
+        emit(f"synth.{name}.cold_speedup", 0.0,
+             f"{sweep['cold_speedup_x']:.2f}x")
+        emit(f"synth.{name}.warm_speedup", 0.0,
+             f"{sweep['warm_speedup_x']:.2f}x "
+             f"({sweep['warm_compiles']} compiles)")
+        assert hw_identical, f"{name}: engine hardware labels diverged"
+        assert warm_identical, f"{name}: warm labels diverged"
+        assert labels_identical, f"{name}: full labels diverged"
+        assert front_identical, f"{name}: fronts diverged"
+        assert warm["compiles"] == 0, f"{name}: warm rerun compiled"
+
+    wl = report["workloads"]["smoothed_dct"]["context_sweep"]
+    if not args.smoke and wl["cold_speedup_x"] < 3.0:
+        print(f"WARNING: smoothed_dct cold context-sweep speedup "
+              f"{wl['cold_speedup_x']:.2f}x < 3x", file=sys.stderr)
+
+    out_path = os.path.abspath(args.out)
+    if args.smoke:
+        print(f"smoke mode: not writing {out_path}", file=sys.stderr)
+        return
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"wrote {out_path}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

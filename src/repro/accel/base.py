@@ -23,7 +23,8 @@ import numpy as np
 
 from ..core.acl.library import Circuit, Library
 
-__all__ = ["Slot", "Accelerator", "RANK_CHOICES", "decode_genome", "gene_sizes"]
+__all__ = ["Slot", "Accelerator", "RANK_CHOICES", "decode_genome",
+           "gene_sizes", "grouped_deploy_signature"]
 
 # rank gene vocabulary (beyond-paper DSE axis); index 0 = paper-faithful
 # deterministic rank (circuit.eff_rank)
@@ -133,6 +134,52 @@ class Accelerator:
         (im2col for filters, transform matrix for DCT)."""
         raise NotImplementedError
 
+    def deploy_signature(self, specs: Sequence) -> Optional[Tuple[tuple, tuple]]:
+        """``(family, classes)`` structural key of ``build_deploy(specs)``'s
+        compiled graph, for the synthesis engine's structural compile
+        cache (core/features/synth.py).  Two spec lists with equal
+        signatures must compile to identical HLO-level cost numbers —
+        the engine VERIFIES this on each family's first collisions and
+        pins divergent families back to exact identity keys, so a too-
+        coarse signature costs correctness nothing, only verification
+        compiles.
+
+        ``family`` identifies the graph builder + fixed geometry (the
+        unit of verification); ``classes`` the per-slot deployment
+        structure.  The default is conservative: family is this
+        accelerator's labeling identity (name, shapes, group widths,
+        passes, fingerprint extras) and classes are the ORDERED per-slot
+        (rank, truncated bits, signedness) — circuits sharing a class
+        interchange, slots do not.  Accelerators whose slots are
+        interchangeable (equal-width grouped matmuls) override with
+        ``grouped_deploy_signature``.  Return None to opt out of
+        structural keying entirely."""
+        try:
+            shape: Tuple = tuple(int(v) for v in self.matmul_shape())
+        except NotImplementedError:
+            shape = ()
+        try:
+            widths: Tuple = tuple(int(e - s) for s, e in self.slot_groups())
+        except NotImplementedError:
+            widths = ()
+        if hasattr(self, "label_fingerprint"):
+            extra = str(self.label_fingerprint())
+        else:
+            extra = repr({
+                k: repr(getattr(self, k))
+                for k in ("seed", "batch", "seq") if hasattr(self, k)
+            })
+        family = (
+            "accel", type(self).__name__, self.name, shape, widths,
+            int(getattr(self, "deploy_passes", 1)),
+            tuple((s.name, s.kind) for s in self.slots), extra,
+        )
+        classes = tuple(
+            (int(sp.rank), int(sp.trunc_bits), bool(sp.signed))
+            for sp in specs
+        )
+        return family, classes
+
     def slot_groups(self) -> List[Tuple[int, int]]:
         """K-ranges of each *multiplier* slot in the deployment matmul."""
         raise NotImplementedError
@@ -155,6 +202,29 @@ class Accelerator:
         ref = self.exact_output(inputs)
         out = self.simulate(circuits, inputs)
         return qor_mod.psnr(ref, out, peak)
+
+
+def grouped_deploy_signature(accel: "Accelerator", specs: Sequence
+                             ) -> Tuple[tuple, tuple]:
+    """Structural signature for plain ``grouped_matmul`` deployments
+    (one rank-k matmul per K-slot-group, partials summed): the graph is
+    a sum of per-group subgraphs whose shapes depend only on each
+    group's width and spec class, so slots with equal widths PERMUTE
+    freely — classes are the sorted multiset of (width, rank, trunc,
+    signed).  Family drops the accelerator's NAME on purpose: a
+    pipeline's stage view at the same geometry (e.g. ``smoothed_dct/
+    stage0`` vs ``gaussian3x3``) shares the standalone accelerator's
+    compiles."""
+    family = (
+        "grouped",
+        tuple(int(v) for v in accel.matmul_shape()),
+        int(getattr(accel, "deploy_passes", 1)),
+    )
+    classes = tuple(sorted(
+        (int(e - s), int(sp.rank), int(sp.trunc_bits), bool(sp.signed))
+        for (s, e), sp in zip(accel.slot_groups(), specs)
+    ))
+    return family, classes
 
 
 def gene_sizes(

@@ -142,6 +142,11 @@ class GaussianFilter(Accelerator):
     def mul_slot_constants(self):
         return [int(c) for c in GAUSS_COEFFS]
 
+    def deploy_signature(self, specs):
+        from .base import grouped_deploy_signature
+
+        return grouped_deploy_signature(self, specs)
+
     def build_deploy(self, specs: Sequence, inputs: Optional[np.ndarray] = None):
         """-> (jax_fn, args): the rank-k MXU deployment of this variant.
 

@@ -156,6 +156,11 @@ class MCMAccelerator(Accelerator):
     def mul_slot_constants(self):
         return [int(c) for c in HEVC_C[self.row]]
 
+    def deploy_signature(self, specs):
+        from .base import grouped_deploy_signature
+
+        return grouped_deploy_signature(self, specs)
+
     def build_deploy(self, specs: Sequence, inputs: Optional[np.ndarray] = None):
         import jax.numpy as jnp
 
@@ -288,6 +293,26 @@ class HEVCDct(Accelerator):
 
     def mul_slot_constants(self):
         return [int(HEVC_C[r, j]) for r in range(4) for j in range(4)]
+
+    def deploy_signature(self, specs):
+        """The 2-D DCT deploys each spec as a (m,1)@(1,1) product in BOTH
+        passes; the 16 slots are shape-interchangeable, so classes are
+        the sorted multiset.  Its builder is not plain grouped_matmul —
+        the family carries the class name (no cross-accelerator sharing)
+        plus the canonical deploy input shape, which differs when the
+        DCT runs in situ inside a pipeline (smaller intermediate images
+        re-block to a different m)."""
+        shape = getattr(self, "_native_input_shape", None)
+        if shape is None:
+            shape = np.shape(self.sample_inputs(1, seed=1))
+            self._native_input_shape = shape
+        family = ("hevc_dct4x4_2pass", shape,
+                  tuple(int(v) for v in self.matmul_shape()))
+        classes = tuple(sorted(
+            (int(sp.rank), int(sp.trunc_bits), bool(sp.signed))
+            for sp in specs
+        ))
+        return family, classes
 
     def build_deploy(self, specs: Sequence, inputs: Optional[np.ndarray] = None):
         """Deployment: two grouped matmuls (m,4)@(4,4) with per-(row, j)

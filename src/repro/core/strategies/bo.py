@@ -43,6 +43,23 @@ def _norm_pdf(z: np.ndarray) -> np.ndarray:
     return np.exp(-0.5 * z * z) / math.sqrt(2.0 * math.pi)
 
 
+def _row_keys(genomes: np.ndarray, width: int) -> np.ndarray:
+    """(n, width) int64 genomes -> (n,) void row keys: each key's bytes
+    equal ``row.tobytes()``, but the whole batch is encoded in one C
+    view instead of a per-row Python loop."""
+    a = np.ascontiguousarray(
+        np.atleast_2d(np.asarray(genomes, dtype=np.int64))
+    ).reshape(-1, width)
+    return a.view(np.dtype((np.void, a.dtype.itemsize * width))).reshape(-1)
+
+
+def _first_occurrence(keys: np.ndarray) -> np.ndarray:
+    """Indices of each key's first occurrence, in original order (the
+    vectorized equivalent of the seen-set dedup loop)."""
+    _, first = np.unique(keys, return_index=True)
+    return np.sort(first)
+
+
 class BOStrategy(SearchStrategy):
     name = "bo"
 
@@ -75,7 +92,10 @@ class BOStrategy(SearchStrategy):
         self._pending: Optional[np.ndarray] = None
         self._obs_g: List[np.ndarray] = []
         self._obs_o: List[np.ndarray] = []
-        self._seen: set = set()
+        self._seen_keys = _row_keys(
+            np.empty((0, len(self.gene_sizes)), dtype=np.int64),
+            len(self.gene_sizes),
+        )
         self.n_evaluated = 0
         self.history: List[GenerationLog] = []
 
@@ -95,7 +115,9 @@ class BOStrategy(SearchStrategy):
 
     def _candidate_pool(self) -> np.ndarray:
         """Random genomes + mutations of the current non-dominated set,
-        deduped against everything already observed."""
+        deduped against everything already observed.  Dedup is fully
+        vectorized (void-view row keys + np.unique/np.isin), so growing
+        the pool no longer grows a per-row Python loop."""
         g = len(self.gene_sizes)
         n_rand = self.pool_size // 2
         pool = [self._rng.integers(0, self.gene_sizes[None, :],
@@ -108,14 +130,11 @@ class BOStrategy(SearchStrategy):
         resets = self._rng.integers(0, self.gene_sizes[None, :],
                                     size=base.shape)
         pool.append(np.where(mut, resets, base))
-        cand = np.concatenate(pool)
-        rows, seen = [], set(self._seen)
-        for k, row in enumerate(cand):
-            key = row.tobytes()
-            if key not in seen:
-                seen.add(key)
-                rows.append(k)
-        return cand[np.array(rows)] if rows else cand[:0]
+        cand = np.concatenate(pool).astype(np.int64)
+        keys = _row_keys(cand, g)
+        first = _first_occurrence(keys)
+        keep = first[~np.isin(keys[first], self._seen_keys)]
+        return cand[keep] if len(keep) else cand[:0]
 
     def _acquire(self) -> np.ndarray:
         """One ParEGO round: scalarize, fit, maximize EI over the pool."""
@@ -159,14 +178,12 @@ class BOStrategy(SearchStrategy):
                         0, self.gene_sizes[None, :],
                         size=(self.batch_size, len(self.gene_sizes)),
                     )
-                # dedup the initial design against itself
-                rows, seen = [], set()
-                for k, row in enumerate(np.asarray(batch, dtype=np.int64)):
-                    key = row.tobytes()
-                    if key not in seen:
-                        seen.add(key)
-                        rows.append(k)
-                batch = np.asarray(batch, dtype=np.int64)[np.array(rows)]
+                # dedup the initial design against itself (vectorized
+                # first-occurrence, original order preserved)
+                batch = np.asarray(batch, dtype=np.int64)
+                batch = batch[_first_occurrence(
+                    _row_keys(batch, len(self.gene_sizes))
+                )]
             else:
                 batch = self._acquire()
             self._pending = np.asarray(batch, dtype=np.int64)
@@ -177,8 +194,9 @@ class BOStrategy(SearchStrategy):
         objectives = np.asarray(objectives, dtype=np.float64)
         self._obs_g.append(np.array(genomes))
         self._obs_o.append(objectives)
-        for row in genomes:
-            self._seen.add(row.tobytes())
+        self._seen_keys = np.concatenate([
+            self._seen_keys, _row_keys(genomes, len(self.gene_sizes)),
+        ])
         self.n_evaluated += len(genomes)
         log = GenerationLog(self._round, np.array(genomes), objectives,
                             self.n_evaluated)
@@ -246,7 +264,10 @@ class BOStrategy(SearchStrategy):
         self._obs_g = [decode_array(a, width=g) for a in state["obs_g"]]
         self._obs_o = [decode_array(a, dtype=np.float64)
                        for a in state["obs_o"]]
-        self._seen = {row.tobytes() for a in self._obs_g for row in a}
+        self._seen_keys = _row_keys(
+            np.concatenate(self._obs_g) if self._obs_g
+            else np.empty((0, g), dtype=np.int64), g,
+        )
         self.n_evaluated = state["n_evaluated"]
         self.history = []
         return self

@@ -273,6 +273,7 @@ def run_hierarchical(
         ctx = EvalContext(
             pipeline, library,
             rank_genes=cfg.rank_genes, n_qor_samples=cfg.n_qor_samples,
+            synth_cache=getattr(manager, "synth_cache", None),
         )
 
         def labeler(g):

@@ -292,6 +292,24 @@ class StagedPipeline(Accelerator):
             ))
         return repr((parts, tuple(c.name for c in self.couplings)))
 
+    def deploy_signature(self, specs):
+        """The chained deployment's structural key: per-stage signatures
+        composed with the coupling names.  Classes keep the stage
+        boundaries (stage A's slots never permute into stage B); within
+        a stage the stage's own signature decides interchangeability.
+        Any stage opting out opts the whole chain out."""
+        fams, classes = [], []
+        for st, sp in zip(self.stages, self.split_per_mul(specs)):
+            sig = st.deploy_signature(sp)
+            if sig is None:
+                return None
+            f, c = sig
+            fams.append(tuple(f))
+            classes.append(tuple(c))
+        family = ("staged", tuple(c.name for c in self.couplings),
+                  tuple(fams))
+        return family, tuple(classes)
+
     # --- hierarchy --------------------------------------------------------
     def stage_views(self) -> List["StageView"]:
         return [StageView(self, i) for i in range(len(self.stages))]
@@ -378,6 +396,37 @@ class StageView(Accelerator):
                 self.pipeline.sample_inputs(1, seed=1), self.index
             )
         return self.stage.build_deploy(specs, inputs=np.asarray(inputs))
+
+    def deploy_signature(self, specs):
+        """The stage's own signature — a stage view whose in-situ deploy
+        input matches the standalone stage's native input shape (always
+        true for stage 0) compiles IDENTICAL graphs and shares the
+        standalone accelerator's cache entries; deeper stages, fed a
+        different intermediate shape by the chain, get a shape-prefixed
+        family of their own."""
+        sig = self.stage.deploy_signature(specs)
+        if sig is None:
+            return None
+        family, classes = sig
+        native = getattr(self, "_native_shape_cache", None)
+        if native is None:
+            native = np.shape(self.stage.sample_inputs(1, seed=1))
+            self._native_shape_cache = native
+        if self._insitu_shape() != native:
+            family = ("stage_view", self._insitu_shape()) + tuple(family)
+        return family, classes
+
+    def _insitu_shape(self) -> Tuple[int, ...]:
+        """Shape of this stage's deploy example input (the pipeline input
+        propagated through the exact prefix); cached — signature lookups
+        must not re-run the prefix simulation per genome."""
+        shape = getattr(self, "_insitu_shape_cache", None)
+        if shape is None:
+            shape = np.shape(self.pipeline.stage_inputs(
+                self.pipeline.sample_inputs(1, seed=1), self.index
+            ))
+            self._insitu_shape_cache = shape
+        return shape
 
     def label_fingerprint(self) -> str:
         return f"stage{self.index}@{self.pipeline.label_fingerprint()}"

@@ -44,6 +44,11 @@ def main():
     ap.add_argument("--store", default=None,
                     help="persistent JSONL label store shared by the "
                          "stage campaigns AND the final verification")
+    ap.add_argument("--synth-cache", default=None,
+                    help="persistent JSONL structural compile cache "
+                         "shared by the stage campaigns (stage 0 rides "
+                         "the standalone accelerator's compiles) and the "
+                         "end-to-end verification")
     ap.add_argument("--eval-workers", type=int, default=2)
     ap.add_argument("--campaign-workers", type=int, default=0,
                     help="0 = one worker per stage")
@@ -73,6 +78,7 @@ def main():
     mgr_kw = dict(
         eval_workers=args.eval_workers,
         campaign_workers=args.campaign_workers or len(pipeline.stages),
+        synth_cache=args.synth_cache or None,
     )
     if args.store:
         from ..service.store import JsonlLabelStore
@@ -80,6 +86,9 @@ def main():
         store = JsonlLabelStore(args.store)
         print(f"[dse-hier] label store {args.store}: {len(store)} entries")
     manager = CampaignManager(store, **mgr_kw)
+    if manager.synth_cache is not None:
+        print(f"[dse-hier] synth cache {args.synth_cache}: "
+              f"{len(manager.synth_cache)} compiled structures")
     try:
         res = run_hierarchical(pipeline, library, cfg,
                                manager=manager, verbose=True)

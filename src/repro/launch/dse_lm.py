@@ -45,6 +45,10 @@ def main():
     ap.add_argument("--store", default=None,
                     help="persistent JSONL label store: ground-truth labels "
                          "are reused across runs (repro.service.store)")
+    ap.add_argument("--synth-cache", default=None,
+                    help="persistent JSONL structural compile cache: XLA "
+                         "synthesis compiles are reused across runs and "
+                         "evaluation contexts (core.features.synth)")
     ap.add_argument("--eval-workers", type=int, default=2,
                     help="labeling worker threads when --store is set")
     ap.add_argument("--out", default=None)
@@ -65,6 +69,14 @@ def main():
         ),
         seed=args.seed,
     )
+
+    if args.synth_cache:
+        from ..core.features import synth
+
+        cache = synth.JsonlSynthCache(args.synth_cache)
+        synth.set_shared_synth_cache(cache)
+        print(f"[dse-lm] synth cache {args.synth_cache}: "
+              f"{len(cache)} compiled structures")
 
     labeler = scheduler = None
     if args.store:

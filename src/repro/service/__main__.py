@@ -23,6 +23,12 @@ def main(argv=None):
     ap.add_argument("--port", type=int, default=8177)
     ap.add_argument("--store", default="runs/service_labels.jsonl",
                     help="JSONL label-store path (persistent across runs)")
+    ap.add_argument("--synth-cache", default="runs/service_synth.jsonl",
+                    help="persistent structural compile cache (JSONL "
+                         "sidecar next to the label store): warm runs, "
+                         "restarted services and every process-pool "
+                         "labeler worker share one compile pool; '' "
+                         "disables persistence (in-process sharing only)")
     ap.add_argument("--eval-workers", type=int, default=2,
                     help="ground-truth labeling worker threads")
     ap.add_argument("--eval-backend", choices=("thread", "process"),
@@ -67,7 +73,11 @@ def main(argv=None):
         max_batch=args.max_batch,
         max_wait_s=args.max_wait_ms / 1e3,
         snapshot_path=args.snapshots or None,
+        synth_cache=args.synth_cache or None,
     )
+    if manager.synth_cache is not None:
+        print(f"[service] synth cache {args.synth_cache}: "
+              f"{len(manager.synth_cache)} compiled structures")
     if args.snapshots:
         resumable = manager.snapshot_ids()
         if resumable:

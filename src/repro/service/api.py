@@ -23,7 +23,13 @@ Endpoints (JSON in/out):
     GET  /front?accel=<name>     -> merged non-dominated front over every
                                     completed campaign for that accelerator
     GET  /strategies             -> registered explorer names
-    GET  /stats                  -> store/scheduler/surrogate counters
+    GET  /stats                  -> the labeling economy in one blob:
+                                    label-store hits, in-flight dedup
+                                    hits, coalesced batches, per-backend
+                                    labeler counters (incl. process-pool
+                                    worker synthesis counters), synth-
+                                    cache hit rate + verification state,
+                                    surrogate registry counters
     GET  /healthz                -> {"ok": true}
 
 Run it with ``python -m repro.service`` (see __main__.py).  ``Client``

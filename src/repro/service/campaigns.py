@@ -472,13 +472,27 @@ class CampaignManager:
         keep_campaigns: int = 2048,
         snapshot_every: int = 1,
         snapshot_path: Optional[str] = None,
+        synth_cache: Optional[object] = None,
     ):
         self.store = store if store is not None else InMemoryLabelStore()
+        # persistent structural compile cache (core.features.synth): a
+        # path builds a JsonlSynthCache shared by every campaign context
+        # AND (by path) every process-pool labeler worker; a SynthCache
+        # object is used as-is; None keeps the process-default in-memory
+        # sharing
+        self._owns_synth_cache = isinstance(synth_cache, str)
+        if self._owns_synth_cache:
+            from ..core.features.synth import JsonlSynthCache
+
+            self.synth_cache = JsonlSynthCache(synth_cache)
+        else:
+            self.synth_cache = synth_cache
         self.scheduler = scheduler or EvalScheduler(
             self.store, n_workers=eval_workers,
             max_batch=max_batch, max_wait_s=max_wait_s,
             backend=eval_backend, process_workers=process_workers,
             chunk_size=chunk_size,
+            synth_cache_path=getattr(self.synth_cache, "path", None),
         )
         self.registry = SurrogateRegistry()
         # campaign workers STEP campaigns cooperatively: one executor
@@ -561,6 +575,7 @@ class CampaignManager:
             accel, library,
             rank_genes=spec.rank_genes,
             n_qor_samples=spec.n_qor_samples,
+            synth_cache=self.synth_cache,
         )
         provider = self.registry.provider(c.ctx.fingerprint, spec)
         c.driver = DseCampaign(
@@ -944,20 +959,37 @@ class CampaignManager:
         }
 
     def stats(self) -> Dict:
+        """The service's whole labeling economy in one JSON blob: label-
+        store hits, in-flight dedup hits, coalesced batches (scheduler);
+        per-backend labeler counters incl. the process pool's aggregated
+        worker synthesis counters (scheduler.labeler); synth-cache hit
+        rate and verification state (synth)."""
+        from ..core.features import synth as synth_mod
+
         with self._lock:
             by_state: Dict[str, int] = {}
             for c in self._campaigns.values():
                 by_state[c.state] = by_state.get(c.state, 0) + 1
+        cache = (self.synth_cache if self.synth_cache is not None
+                 else synth_mod.shared_synth_cache())
         return {
             "campaigns": by_state,
             "scheduler": self.scheduler.stats(),
             "surrogates": self.registry.stats(),
+            "synth": {
+                "structural_keys": synth_mod.STRUCTURAL_KEYS,
+                "fast_codegen": synth_mod.FAST_CODEGEN,
+                "persistent": hasattr(cache, "path"),
+                "cache": cache.stats(),
+            },
         }
 
     def shutdown(self, *, wait: bool = True) -> None:
         self._hier_pool.shutdown(wait=wait)
         self._pool.shutdown(wait=wait)
         self.scheduler.shutdown(wait=wait)
+        if self._owns_synth_cache and self.synth_cache is not None:
+            self.synth_cache.close()
         with self._snap_lock:
             if self._snap_fh is not None:
                 self._snap_fh.close()

@@ -101,6 +101,7 @@ class EvalScheduler:
         backend: str = "thread",
         process_workers: Optional[int] = None,
         chunk_size: Optional[int] = None,
+        synth_cache_path: Optional[str] = None,
     ):
         if backend not in ("thread", "process"):
             raise ValueError(
@@ -117,6 +118,7 @@ class EvalScheduler:
             self._proc = ProcessPoolLabeler(
                 process_workers if process_workers is not None else n_workers,
                 chunk_size=chunk_size,
+                synth_cache_path=synth_cache_path,
             )
         self.n_process_batches = 0
         self.n_process_fallbacks = 0
@@ -323,9 +325,14 @@ class EvalScheduler:
 
     # ------------------------------------------------------------------
     def stats(self) -> Dict:
+        # per-backend labeler counters (the process pool aggregates its
+        # workers' synthesis-engine counters); taken outside the cv so a
+        # slow pool can't stall submitters
+        labeler = self._proc.stats() if self._proc is not None else None
         with self._cv:
             return {
                 "backend": self.backend,
+                "labeler": labeler,
                 "process_batches": self.n_process_batches,
                 "process_fallbacks": self.n_process_fallbacks,
                 "requests": self.n_requests,

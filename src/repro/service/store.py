@@ -129,6 +129,10 @@ class EvalContext:
     rank_genes: bool = False
     n_qor_samples: int = 4
     qor_seed: int = synth.DEFAULT_QOR_SEED
+    # shared/persistent compile cache (synth.SynthCache); None uses the
+    # process-wide default.  Machinery, not semantics: deliberately NOT
+    # part of the fingerprint — labels are identical with or without it
+    synth_cache: Optional[object] = field(default=None, repr=False)
     _fp: Optional[str] = field(default=None, repr=False)
     _qor_inputs: Optional[np.ndarray] = field(default=None, repr=False)
     _synth_cache: dict = field(default_factory=dict, repr=False)
@@ -162,7 +166,7 @@ class EvalContext:
         return synth.label_variants(
             self.accel, np.atleast_2d(genomes), self.library,
             rank_genes=self.rank_genes, qor_inputs=self.qor_inputs,
-            cache=self._synth_cache,
+            cache=self._synth_cache, synth_cache=self.synth_cache,
         )
 
 

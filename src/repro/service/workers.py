@@ -65,16 +65,22 @@ def warm_library(lib) -> None:
                 c.factors(r)
 
 
-def _init_worker(xla_flags: str = "") -> None:
+def _init_worker(xla_flags: str = "", synth_cache_path: str = "") -> None:
     """Run once per spawned process: pin down XLA's threading before jax
     is imported, then build the library and warm the per-circuit
-    labeling caches so the first labeled chunk doesn't pay them."""
+    labeling caches so the first labeled chunk doesn't pay them.  With a
+    ``synth_cache_path`` the worker joins the pool-wide persistent
+    compile cache (one JSONL file appended by every worker AND the
+    parent), so no structure ever compiles twice across the pool."""
     if xla_flags:
         os.environ["XLA_FLAGS"] = (
             os.environ.get("XLA_FLAGS", "") + " " + xla_flags
         ).strip()
     from ..core.acl.library import default_library
+    from ..core.features import synth
 
+    if synth_cache_path:
+        synth.set_shared_synth_cache(synth.JsonlSynthCache(synth_cache_path))
     lib = default_library()
     warm_library(lib)
     _WORKER_STATE["library"] = lib
@@ -92,6 +98,7 @@ def _worker_label(
     """Label one genome chunk inside a worker process."""
     if "library" not in _WORKER_STATE:  # fork-start or initializer skipped
         _init_worker()
+    from ..core.features import synth
     from .campaigns import make_accelerator
 
     key = (accel_name, bool(rank_genes), int(n_qor_samples), int(qor_seed))
@@ -112,8 +119,17 @@ def _worker_label(
             f"worker context fingerprint {ctx.fingerprint} != parent "
             f"{expected_fp} for {accel_name!r}"
         )
+    scache = synth.shared_synth_cache()
+    if hasattr(scache, "refresh"):
+        # pick up compiles that sibling workers / the parent appended
+        scache.refresh()
     labels = ctx.ground_truth(np.asarray(genomes, dtype=np.int64))
-    return {k: np.asarray(labels[k]) for k in LABEL_KEYS}
+    out = {k: np.asarray(labels[k]) for k in LABEL_KEYS}
+    # piggyback this worker's cumulative synth counters on the result so
+    # the parent's ProcessPoolLabeler.stats() can aggregate them without
+    # an extra round trip
+    out["_synth_stats"] = {"pid": os.getpid(), **scache.stats()}
+    return out
 
 
 class ProcessPoolLabeler:
@@ -131,17 +147,20 @@ class ProcessPoolLabeler:
         chunk_size: Optional[int] = None,
         mp_context: str = "spawn",
         xla_flags: str = WORKER_XLA_FLAGS,
+        synth_cache_path: Optional[str] = None,
     ):
         self.n_workers = max(1, int(n_workers))
         self.chunk_size = None if chunk_size is None else max(1, int(chunk_size))
+        self.synth_cache_path = synth_cache_path
         self._pool = ProcessPoolExecutor(
             self.n_workers,
             mp_context=mp.get_context(mp_context),
             initializer=_init_worker,
-            initargs=(xla_flags,),
+            initargs=(xla_flags, synth_cache_path or ""),
         )
         self._lock = threading.Lock()
         self._safe_fps: Dict[str, bool] = {}   # ctx fingerprint -> verdict
+        self._worker_synth: Dict[int, Dict] = {}  # pid -> latest counters
         self.n_chunks = 0
         self.n_labeled = 0
 
@@ -202,16 +221,40 @@ class ProcessPoolLabeler:
         with self._lock:
             self.n_chunks += len(parts)
             self.n_labeled += len(genomes)
+            for r in results:
+                ws = r.get("_synth_stats")
+                if ws:   # counters are cumulative: latest-per-pid wins
+                    self._worker_synth[ws["pid"]] = ws
         return {
             k: np.concatenate([r[k] for r in results]) for k in LABEL_KEYS
         }
 
     def stats(self) -> Dict[str, int]:
+        """Pool counters + the aggregated synthesis-engine counters of
+        every worker process (compiles, identity/structural cache hits,
+        verification compiles, pinned families)."""
+        with self._lock:
+            per_worker = list(self._worker_synth.values())
+        synth_agg = {k: sum(int(w.get(k, 0)) for w in per_worker)
+                     for k in ("compiles", "verify_compiles",
+                               "identity_hits", "structural_hits",
+                               "pinned_families")}
+        # cache sizes are shared state when the pool rides one cache
+        # file: report the widest view, not the (double-counting) sum
+        for k in ("entries", "structures"):
+            synth_agg[k] = max((int(w.get(k, 0)) for w in per_worker),
+                               default=0)
+        served = synth_agg["identity_hits"] + synth_agg["structural_hits"]
+        total = served + synth_agg["compiles"]
+        synth_agg["hit_rate"] = (served / total) if total else 0.0
+        synth_agg["workers_reporting"] = len(per_worker)
         with self._lock:
             return {
                 "workers": self.n_workers,
                 "chunks": self.n_chunks,
                 "labeled": self.n_labeled,
+                "synth_cache_path": self.synth_cache_path,
+                "synth": synth_agg,
             }
 
     def shutdown(self, *, wait: bool = True) -> None:

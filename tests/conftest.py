@@ -13,3 +13,15 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(autouse=True)
+def _reset_synth_engine_state():
+    """The synthesis engine keeps module-global verification state (fast-
+    codegen verdicts, structural verdicts, the shared compile cache).
+    One test's verification history or cached compiles must never leak
+    into another, so every test starts from a cold engine."""
+    from repro.core.features import synth
+
+    synth.reset_fast_codegen()
+    yield

@@ -171,6 +171,10 @@ def test_fast_codegen_and_lean_trace_are_label_invariant():
         seed_labels = synth.label_variants(accel, genomes, LIB, cache={})
         ops.LEGACY_EMBED_TABLES = False
         synth.FAST_CODEGEN = True
+        # cold engine for the second run: the shared compile cache would
+        # otherwise answer from the seed run's compiles and nothing new
+        # would compile (exactly the leak reset_fast_codegen exists for)
+        synth.reset_fast_codegen()
         new_labels = synth.label_variants(accel, genomes, LIB, cache={})
     finally:
         synth.FAST_CODEGEN = fast0
