@@ -30,7 +30,15 @@ wall-clock ratios can be read against what the host actually provides:
 on a full 2-core machine the process backend's projected throughput is
 ``n_cores / cpu_s_per_label``.
 
+``--fleet`` benchmarks the multi-host labeling fleet instead and writes
+``BENCH_fleet.json``: labels/sec of one vs two local fleet workers on
+gaussian3x3 (measured, plus a CPU-seconds projection onto a machine
+that actually provides 2 cores), then a kill -9 drill — one worker is
+killed while holding a lease mid-batch and the batch must still
+complete with labels byte-identical to the in-process engine.
+
 Run:  PYTHONPATH=src python benchmarks/labeler_throughput.py [--smoke]
+      PYTHONPATH=src python benchmarks/labeler_throughput.py --fleet [--smoke]
 """
 
 from __future__ import annotations
@@ -38,7 +46,10 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import signal
+import subprocess
 import sys
+import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
 
@@ -167,17 +178,215 @@ def bench_batched_process(name, genomes, n_qor, pool):
     return labels, time.perf_counter() - t0
 
 
+# --------------------------------------------------------------------------
+# fleet mode
+def _wait_until(pred, timeout, what):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        if pred():
+            return
+        time.sleep(0.05)
+    raise TimeoutError(f"timed out waiting for {what}")
+
+
+def _spawn_fleet_worker(base, wid):
+    src = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    return subprocess.Popen(
+        [sys.executable, "-m", "repro.fleet.worker",
+         "--orchestrator", base, "--id", wid, "--max-idle-s", "600"],
+        env={**os.environ, "PYTHONPATH": src},
+        stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL,
+    )
+
+
+def run_fleet_bench(args):
+    """1 vs 2 local fleet workers on gaussian3x3 + a kill -9 drill.
+
+    Real ``python -m repro.fleet.worker`` subprocesses join an in-parent
+    ``FleetCoordinator`` over HTTP.  Each phase gets a warmup batch first
+    so both phases measure the steady state of long-lived workers
+    (per-circuit tables and structural compile caches warm); rounds use
+    fresh genomes so the label store never answers.  The drill kills one
+    of two workers with SIGKILL while it holds a lease mid-batch: the
+    batch must still complete (heartbeat expiry requeues the dead
+    worker's chunks) with labels byte-identical to the in-process
+    engine on the same genomes.
+    """
+    from repro.core.acl.library import default_library
+    from repro.fleet import FleetCoordinator, serve_fleet
+    from repro.service.workers import warm_library
+
+    name = "gaussian3x3"
+    G = args.n or (4 if args.smoke else 24)
+    rounds = args.rounds or (1 if args.smoke else 3)
+    n_qor = 2 if args.smoke else 4
+    library = default_library()
+    warm_library(library)
+
+    section("machine parallelism probe")
+    ceiling = _parallel_ceiling()
+    emit("fleet.parallel_ceiling", 0.0, f"{ceiling:.2f}x")
+
+    coord = FleetCoordinator(lease_ttl_s=60.0, heartbeat_ttl_s=10.0)
+    srv = serve_fleet(coord, port=0)
+    base = f"http://127.0.0.1:{srv.server_address[1]}"
+    ctx0 = _fresh_ctx(name, n_qor)
+    procs = {}
+
+    def phase(pids, seed0):
+        walls, cpus = [], []
+        for rnd in range(rounds):
+            genomes = _population(ctx0.accel, library, G, seed=seed0 + rnd)
+            c0 = _cpu_snapshot(pids)
+            t0 = time.perf_counter()
+            coord.label(_fresh_ctx(name, n_qor), genomes)
+            walls.append((time.perf_counter() - t0) / G)
+            cpus.append((_cpu_snapshot(pids) - c0) / G)
+        wall = float(np.median(walls))
+        return {"s_per_label": wall, "labels_per_sec": 1.0 / wall,
+                "cpu_s_per_label": float(np.median(cpus))}
+
+    try:
+        section("fleet: worker bench-w0 joining (register + warm)")
+        procs["bench-w0"] = _spawn_fleet_worker(base, "bench-w0")
+        _wait_until(lambda: coord.stats()["live"] >= 1, 300,
+                    "bench-w0 to register")
+
+        # warmup batch doubles as the byte-identity check against the
+        # in-process engine
+        genomes = _population(ctx0.accel, library, G, seed=999)
+        ref = _fresh_ctx(name, n_qor).ground_truth(genomes)
+        lab = coord.label(_fresh_ctx(name, n_qor), genomes)
+        identical = all(np.array_equal(np.asarray(ref[k]),
+                                       np.asarray(lab[k]))
+                        for k in DET_KEYS)
+        front_identical = bool(np.array_equal(_front(ref), _front(lab)))
+        emit("fleet.labels_identical", 0.0, identical)
+
+        section(f"fleet 1 worker: {rounds} rounds x {G} genomes")
+        one = phase([procs["bench-w0"].pid], seed0=100)
+        emit("fleet.gaussian3x3.1_worker", one["s_per_label"] * 1e6,
+             f"{one['labels_per_sec']:.2f}/s")
+
+        section("fleet: worker bench-w1 joining (elastic, mid-campaign ok)")
+        procs["bench-w1"] = _spawn_fleet_worker(base, "bench-w1")
+        _wait_until(lambda: coord.stats()["live"] >= 2, 300,
+                    "bench-w1 to register")
+        coord.label(_fresh_ctx(name, n_qor),
+                    _population(ctx0.accel, library, G, seed=998))  # warm w1
+
+        section(f"fleet 2 workers: {rounds} rounds x {G} genomes")
+        pids = [p.pid for p in procs.values()]
+        two = phase(pids, seed0=200)
+        emit("fleet.gaussian3x3.2_workers", two["s_per_label"] * 1e6,
+             f"{two['labels_per_sec']:.2f}/s")
+
+        measured = two["labels_per_sec"] / one["labels_per_sec"]
+        # one worker is one process; projected onto a machine that
+        # actually provides 2 cores the fleet runs both workers at
+        # full speed:
+        proj_1 = 1.0 / one["cpu_s_per_label"]
+        proj_2 = 2.0 / two["cpu_s_per_label"]
+        projected = proj_2 / proj_1
+        emit("fleet.gaussian3x3.scaling", 0.0, f"{measured:.2f}x")
+        emit("fleet.gaussian3x3.scaling_projected_2core", 0.0,
+             f"{projected:.2f}x")
+
+        section("fleet: kill -9 drill (bench-w0 dies holding a lease)")
+        kd_genomes = _population(ctx0.accel, library, max(2 * G, 8),
+                                 seed=4242)
+        kd_ref = _fresh_ctx(name, n_qor).ground_truth(kd_genomes)
+        out = {}
+        th = threading.Thread(
+            target=lambda: out.update(
+                labels=coord.label(_fresh_ctx(name, n_qor), kd_genomes)),
+            daemon=True)
+        th.start()
+
+        def _victim_leased():
+            with coord._cv:
+                return any(l.worker == "bench-w0"
+                           for l in coord._leases.values())
+
+        _wait_until(_victim_leased, 120, "bench-w0 to hold a lease")
+        procs["bench-w0"].send_signal(signal.SIGKILL)
+        th.join(timeout=600)
+        assert "labels" in out, "kill drill batch never completed"
+        kd = out["labels"]
+        kd_identical = all(np.array_equal(np.asarray(kd_ref[k]),
+                                          np.asarray(kd[k]))
+                           for k in DET_KEYS)
+        kd_front = bool(np.array_equal(_front(kd_ref), _front(kd)))
+        stats = coord.stats()
+        emit("fleet.kill_drill.labels_identical", 0.0, kd_identical)
+        emit("fleet.kill_drill.requeues", 0.0, stats["requeues"])
+    finally:
+        for p in procs.values():
+            if p.poll() is None:
+                p.kill()
+        coord.shutdown()
+        srv.shutdown()
+
+    report = {
+        "mode": "fleet", "workload": name,
+        "population": G, "rounds": rounds, "n_qor_samples": n_qor,
+        "smoke": bool(args.smoke),
+        "machine": {"os_cpu_count": os.cpu_count(),
+                    "measured_parallel_ceiling_x": ceiling},
+        "labels_identical": bool(identical),
+        "front_identical": front_identical,
+        "backends": {"fleet_1_worker": one, "fleet_2_workers": two},
+        "scaling": {
+            "measured_x": measured,
+            "projected_2core_x": projected,
+            "projected_1_worker_labels_per_sec": proj_1,
+            "projected_2_worker_labels_per_sec": proj_2,
+        },
+        "kill_drill": {
+            "completed": True,
+            "labels_identical": bool(kd_identical),
+            "front_identical": kd_front,
+            "requeues": stats["requeues"],
+            "expired_leases": stats["expired_leases"],
+            "dead_workers": stats["dead_workers"],
+            "duplicate_results": stats["duplicate_results"],
+            "local_fallback_chunks": stats["local_fallback_chunks"],
+            "remote_labels": stats["remote_labels"],
+            "local_labels": stats["local_labels"],
+        },
+    }
+    assert identical, "fleet labels diverged from in-process engine"
+    assert kd_identical, "kill drill labels diverged"
+    if not args.smoke and measured < 1.5 and projected < 1.5:
+        print(f"WARNING: fleet 2-worker scaling {measured:.2f}x measured "
+              f"/ {projected:.2f}x projected < 1.5x", file=sys.stderr)
+
+    out_path = os.path.abspath(args.out)
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"wrote {out_path}", file=sys.stderr)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny population, one round (CI: exercise all "
                          "three backends, don't trust the ratios)")
+    ap.add_argument("--fleet", action="store_true",
+                    help="benchmark the multi-host labeling fleet "
+                         "(1 vs 2 local workers + kill -9 drill) and "
+                         "write BENCH_fleet.json instead")
     ap.add_argument("-n", type=int, default=None,
                     help="population size per round")
     ap.add_argument("--rounds", type=int, default=None)
-    ap.add_argument("--out", default=os.path.join(
-        os.path.dirname(__file__), "..", "BENCH_labeler.json"))
+    ap.add_argument("--out", default=None)
     args = ap.parse_args()
+    root = os.path.join(os.path.dirname(__file__), "..")
+    args.out = args.out or os.path.join(
+        root, "BENCH_fleet.json" if args.fleet else "BENCH_labeler.json")
+    if args.fleet:
+        return run_fleet_bench(args)
 
     from repro.core.acl.library import default_library
     from repro.service.workers import ProcessPoolLabeler, warm_library

@@ -1,0 +1,109 @@
+"""Stdlib HTTP client with bounded retry, exponential backoff + jitter.
+
+Every HTTP edge in the fleet (worker registration, lease polling, result
+streaming, heartbeats) and the service ``Client`` rides this one helper
+instead of growing its own ad-hoc ``urllib`` code.  Retries cover the
+transient failures a fleet actually sees — connection refused while the
+orchestrator restarts, a dropped socket, a 502/503/504 from a proxy —
+with exponential backoff and full jitter so a rejoining fleet does not
+synchronize into a thundering herd.
+
+Retrying a POST is safe here because every fleet POST is idempotent by
+construction: registration and heartbeats are upserts, a duplicated
+lease request just creates an extra lease that expires and requeues,
+and a duplicated result commits content-addressed labels that dedupe to
+zero bytes.  Callers with genuinely non-idempotent POSTs (e.g. campaign
+submission) pass ``retries=0``.
+"""
+
+from __future__ import annotations
+
+import json
+import random
+import time
+import urllib.error
+import urllib.request
+from typing import Dict, Optional
+
+__all__ = ["HttpError", "request_json"]
+
+# HTTP statuses worth retrying: the server (or a proxy in front of it)
+# says "not right now", not "you are wrong"
+RETRY_STATUSES = (429, 502, 503, 504)
+
+
+class HttpError(urllib.error.HTTPError):
+    """A non-retryable (or retries-exhausted) HTTP failure.
+
+    Subclasses ``urllib.error.HTTPError`` so callers written against the
+    raw urllib wrapper (``except urllib.error.HTTPError as e: e.code``)
+    keep working unchanged.  ``code``/``status`` is ``None`` for pure
+    transport failures (connection refused, timeout) where no HTTP
+    response ever arrived; ``detail`` carries the server's decoded JSON
+    ``error`` field when it sent one."""
+
+    def __init__(self, url: str, status: Optional[int], detail: str):
+        super().__init__(url, status, detail, None, None)
+        self.url = url
+        self.detail = detail
+
+    def __str__(self):
+        if self.code is None:
+            return f"{self.url}: {self.detail}"
+        return f"{self.url}: HTTP {self.code}: {self.detail}"
+
+
+def request_json(
+    url: str,
+    payload: Optional[Dict] = None,
+    *,
+    method: Optional[str] = None,
+    timeout: float = 30.0,
+    retries: int = 4,
+    backoff_s: float = 0.25,
+    backoff_max_s: float = 4.0,
+    jitter: float = 1.0,
+    rng: Optional[random.Random] = None,
+) -> Dict:
+    """GET (``payload is None``) or POST ``payload`` as JSON and return
+    the decoded JSON response.
+
+    Transient failures (connection errors, timeouts, ``RETRY_STATUSES``)
+    are retried up to ``retries`` times with exponential backoff capped
+    at ``backoff_max_s``; each sleep is scaled by a uniform random
+    factor in ``[1 - jitter/2, 1 + jitter/2]`` (full-jitter style).  Any
+    other HTTP error raises ``HttpError`` immediately with the decoded
+    error body when the server sent one."""
+    if method is None:
+        method = "GET" if payload is None else "POST"
+    rng = rng or random
+    last: Optional[Exception] = None
+    for attempt in range(retries + 1):
+        if attempt:
+            delay = min(backoff_s * (2.0 ** (attempt - 1)), backoff_max_s)
+            if jitter > 0:
+                delay *= 1.0 + jitter * (rng.random() - 0.5)
+            time.sleep(max(delay, 0.0))
+        try:
+            data = None if payload is None else json.dumps(payload).encode()
+            req = urllib.request.Request(
+                url, data=data, method=method,
+                headers={"Content-Type": "application/json"},
+            )
+            with urllib.request.urlopen(req, timeout=timeout) as resp:
+                return json.loads(resp.read() or b"{}")
+        except urllib.error.HTTPError as exc:
+            body = exc.read()
+            try:
+                detail = json.loads(body).get("error", body.decode())
+            except Exception:  # noqa: BLE001 - non-JSON error body
+                detail = body.decode(errors="replace")
+            if exc.code not in RETRY_STATUSES:
+                raise HttpError(url, exc.code, detail) from exc
+            last = HttpError(url, exc.code, detail)
+        except (urllib.error.URLError, ConnectionError, TimeoutError,
+                OSError) as exc:
+            last = exc
+    if isinstance(last, HttpError):
+        raise last
+    raise HttpError(url, None, f"retries exhausted: {last}") from last

@@ -50,6 +50,16 @@ def main():
                          "the standalone accelerator's compiles) and the "
                          "end-to-end verification")
     ap.add_argument("--eval-workers", type=int, default=2)
+    ap.add_argument("--eval-backend", choices=("thread", "process", "fleet"),
+                    default="thread",
+                    help="ground-truth backend for every stage campaign: "
+                         "threads, a process pool, or a multi-host fleet "
+                         "(an orchestrator HTTP listener is started and "
+                         "remote 'python -m repro.fleet.worker' processes "
+                         "may join mid-search)")
+    ap.add_argument("--fleet-port", type=int, default=0,
+                    help="orchestrator port for --eval-backend fleet "
+                         "(0 = ephemeral)")
     ap.add_argument("--campaign-workers", type=int, default=0,
                     help="0 = one worker per stage")
     ap.add_argument("--out", default=None)
@@ -77,6 +87,7 @@ def main():
     store = None
     mgr_kw = dict(
         eval_workers=args.eval_workers,
+        eval_backend=args.eval_backend,
         campaign_workers=args.campaign_workers or len(pipeline.stages),
         synth_cache=args.synth_cache or None,
     )
@@ -89,11 +100,24 @@ def main():
     if manager.synth_cache is not None:
         print(f"[dse-hier] synth cache {args.synth_cache}: "
               f"{len(manager.synth_cache)} compiled structures")
+    fleet_srv = None
+    if args.eval_backend == "fleet":
+        from ..fleet import serve_fleet
+
+        fleet_srv = serve_fleet(manager.scheduler.fleet,
+                                host="0.0.0.0", port=args.fleet_port)
+        port = fleet_srv.server_address[1]
+        print(f"[dse-hier] fleet orchestrator on :{port} — join workers "
+              f"with: python -m repro.fleet.worker --orchestrator "
+              f"http://<this-host>:{port}"
+              + (f" --store {args.store}" if args.store else ""))
     try:
         res = run_hierarchical(pipeline, library, cfg,
                                manager=manager, verbose=True)
     finally:
         manager.shutdown()
+        if fleet_srv is not None:
+            fleet_srv.shutdown()
         if store is not None:
             store.close()
 

@@ -7,6 +7,14 @@ over the approximate-projection space of an assigned architecture.
 Prints the validation PCC of the two surrogates (paper Fig. 6 analogue),
 the discovered Pareto front (QoR vs energy), and per-stage timings
 (paper Fig. 5 analogue).
+
+With ``--service http://host:port`` the search runs as a campaign on a
+running ``python -m repro.service`` instance instead of in this process:
+the driver submits the spec, polls status, and prints the front the
+service computed.  All HTTP goes through ``repro.fleet.http`` (bounded
+retry + backoff), so a briefly-restarting service does not kill the
+driver.  Point the service at ``--eval-backend fleet`` and the labeling
+itself fans out across every registered fleet worker.
 """
 
 from __future__ import annotations
@@ -51,9 +59,20 @@ def main():
                          "evaluation contexts (core.features.synth)")
     ap.add_argument("--eval-workers", type=int, default=2,
                     help="labeling worker threads when --store is set")
+    ap.add_argument("--service", default=None, metavar="URL",
+                    help="run on a campaign service instead of in-process: "
+                         "submit the spec to this base URL (python -m "
+                         "repro.service; with --eval-backend fleet the "
+                         "labels come from the whole fleet)")
+    ap.add_argument("--timeout", type=float, default=3600.0,
+                    help="seconds to wait for the remote campaign "
+                         "(--service only)")
     ap.add_argument("--out", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    if args.service:
+        return _run_on_service(args)
 
     accel = LMAccelerator(get_config(args.arch), seed=args.seed)
     lib = default_library()
@@ -126,6 +145,52 @@ def main():
                 "timings": res.timings,
                 "front": front.tolist(),
                 "front_genomes": res.front_genomes.tolist(),
+            }, f, indent=1)
+
+
+def _run_on_service(args) -> None:
+    """Submit the spec as a campaign on a running service and report its
+    result — the remote twin of the in-process path above."""
+    from ..service.api import Client
+
+    cli = Client(args.service)
+    cid = cli.submit(
+        accel=f"lm:{args.arch}",
+        strategy=args.strategy,
+        pipeline=args.pipeline,
+        n_train=args.n_train,
+        n_qor_samples=2,
+        rank_genes=args.rank_genes,
+        pop_size=args.pop,
+        n_parents=args.parents,
+        n_generations=args.generations,
+        seed=args.seed,
+    )
+    print(f"[dse-lm] campaign {cid} submitted to {args.service}")
+    st = cli.wait(cid, timeout=args.timeout)
+    if st["state"] != "done":
+        raise SystemExit(f"[dse-lm] campaign {cid} ended {st['state']}: "
+                         f"{st.get('error') or 'timeout'}")
+    res = cli.result(cid)
+    front = np.asarray(res["front"], dtype=float)
+    print(f"\n[dse-lm] lm:{args.arch} (strategy={args.strategy}, remote)")
+    if res.get("val_pcc"):
+        print("  surrogate validation PCC: "
+              + ", ".join(f"{k}={v:.3f}" for k, v in res["val_pcc"].items()))
+    order = np.argsort(front[:, 0])
+    print(f"  Pareto front ({len(front)} designs)  [PSNR dB, energy J]:")
+    for i in order[:12]:
+        print(f"    psnr={-front[i, 0]:7.2f}  energy={front[i, 1]:.3e}")
+    if args.out:
+        detail = cli.front(cid)
+        with open(args.out, "w") as f:
+            json.dump({
+                "arch": args.arch,
+                "campaign": cid,
+                "service": args.service,
+                "val_pcc": res.get("val_pcc"),
+                "front": front.tolist(),
+                "front_genomes": detail["genomes"],
             }, f, indent=1)
 
 

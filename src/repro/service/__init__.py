@@ -15,6 +15,13 @@ labels at exit.  This package makes exploration a *service*:
                      surrogates keyed by (accel, pipeline, model)),
   * ``api``        — stdlib HTTP front end (``python -m repro.service``)
                      with submit/status/result and Pareto-front queries.
+
+Ground truth runs on one of three scheduler backends: ``thread`` (in
+process), ``process`` (spawn-safe pool, one host), or ``fleet`` — the
+multi-host orchestrator/worker tier in ``repro.fleet``, where remote
+``python -m repro.fleet.worker`` processes lease coalesced genome
+chunks over HTTP and the service degrades to the in-process backend
+whenever the fleet is empty.
 """
 
 from .store import (

@@ -31,17 +31,32 @@ def main(argv=None):
                          "disables persistence (in-process sharing only)")
     ap.add_argument("--eval-workers", type=int, default=2,
                     help="ground-truth labeling worker threads")
-    ap.add_argument("--eval-backend", choices=("thread", "process"),
+    ap.add_argument("--eval-backend", choices=("thread", "process", "fleet"),
                     default="thread",
                     help="where batched ground truth runs: in-process "
-                         "threads, or a spawn-safe process pool (the only "
-                         "backend that parallelizes the GIL-bound "
-                         "behavioral sim + XLA tracing)")
+                         "threads, a spawn-safe process pool (parallelizes "
+                         "the GIL-bound behavioral sim + XLA tracing on one "
+                         "host), or a multi-host labeling fleet (remote "
+                         "workers join via 'python -m repro.fleet.worker "
+                         "--orchestrator http://this-host:port')")
     ap.add_argument("--process-workers", type=int, default=None,
                     help="process-pool size (default: --eval-workers)")
     ap.add_argument("--chunk-size", type=int, default=None,
                     help="genomes per process-pool chunk (default: "
                          "auto, ~2 chunks per worker)")
+    ap.add_argument("--fleet-fallback", choices=("thread", "process"),
+                    default="thread",
+                    help="in-process backend used when the fleet is empty "
+                         "or a context cannot cross hosts")
+    ap.add_argument("--lease-ttl", type=float, default=30.0,
+                    help="seconds a fleet worker may hold a leased chunk "
+                         "before it requeues")
+    ap.add_argument("--heartbeat-ttl", type=float, default=15.0,
+                    help="seconds of heartbeat silence before a fleet "
+                         "worker is declared dead (its leases requeue)")
+    ap.add_argument("--fleet-chunk", type=int, default=None,
+                    help="genomes per fleet lease (default: auto, ~2 "
+                         "chunks per live worker)")
     ap.add_argument("--campaign-workers", type=int, default=2,
                     help="campaign stepper threads (campaigns multiplex "
                          "cooperatively, so many more campaigns than "
@@ -68,6 +83,10 @@ def main(argv=None):
         eval_backend=args.eval_backend,
         process_workers=args.process_workers,
         chunk_size=args.chunk_size,
+        fleet_fallback=args.fleet_fallback,
+        lease_ttl_s=args.lease_ttl,
+        heartbeat_ttl_s=args.heartbeat_ttl,
+        fleet_chunk=args.fleet_chunk,
         campaign_workers=args.campaign_workers,
         hier_workers=args.hier_workers,
         max_batch=args.max_batch,
@@ -83,6 +102,13 @@ def main(argv=None):
         if resumable:
             print(f"[service] {len(resumable)} resumable campaign(s): "
                   + ", ".join(resumable))
+    if args.eval_backend == "fleet":
+        print("[service] fleet orchestrator mounted at POST /fleet/* — "
+              "join workers with: python -m repro.fleet.worker "
+              f"--orchestrator http://{args.host}:{args.port} "
+              f"--store {args.store}"
+              + (f" --synth-cache {args.synth_cache}"
+                 if args.synth_cache else ""))
     serve(manager, args.host, args.port, quiet=not args.verbose)
 
 

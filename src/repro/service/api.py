@@ -29,8 +29,20 @@ Endpoints (JSON in/out):
                                     labeler counters (incl. process-pool
                                     worker synthesis counters), synth-
                                     cache hit rate + verification state,
-                                    surrogate registry counters
+                                    surrogate registry counters, and —
+                                    under the fleet backend — the fleet:
+                                    registered workers, last-heartbeat
+                                    ages, leases in flight, requeues,
+                                    per-worker labels/sec
     GET  /healthz                -> {"ok": true}
+
+With ``--eval-backend fleet`` the embedded orchestrator's worker
+protocol is mounted too (``repro.fleet``; 404 otherwise):
+
+    POST /fleet/register         -> join/rejoin the labeling fleet
+    POST /fleet/heartbeat        -> keep-alive (+ verified fingerprints)
+    POST /fleet/lease            -> pull one leased genome chunk
+    POST /fleet/result           -> stream a chunk's labels back
 
 Run it with ``python -m repro.service`` (see __main__.py).  ``Client``
 is a matching urllib convenience wrapper used by the examples/tests.
@@ -41,7 +53,6 @@ from __future__ import annotations
 import json
 import re
 import urllib.parse
-import urllib.request
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Dict, Optional, Tuple
 
@@ -101,6 +112,12 @@ class _Handler(BaseHTTPRequestHandler):
                 return self._send({"strategies": available_strategies()})
             if path == "/stats":
                 return self._send(mgr.stats())
+            if path == "/fleet/stats":
+                fleet = getattr(mgr.scheduler, "fleet", None)
+                if fleet is None:
+                    return self._error(404, "fleet backend not enabled "
+                                            "(start with --eval-backend fleet)")
+                return self._send(fleet.stats())
             if path == "/campaigns":
                 return self._send(mgr.list_campaigns())
             if path == "/front":
@@ -129,6 +146,22 @@ class _Handler(BaseHTTPRequestHandler):
 
     def do_POST(self):  # noqa: N802 - BaseHTTPRequestHandler API
         path, _ = self._route()
+        m = re.fullmatch(r"/fleet/(register|heartbeat|lease|result)", path)
+        if m:
+            from ..fleet.orchestrator import handle_fleet_request
+
+            try:
+                n = int(self.headers.get("Content-Length", 0))
+                payload = json.loads(self.rfile.read(n) or b"{}")
+                if not isinstance(payload, dict):
+                    raise ValueError("fleet payload must be a JSON object")
+                fleet = getattr(self.manager.scheduler, "fleet", None)
+                code, obj = handle_fleet_request(fleet, m.group(1), payload)
+                return self._send(obj, code)
+            except (json.JSONDecodeError, TypeError, ValueError) as exc:
+                return self._error(400, f"bad fleet payload: {exc}")
+            except Exception as exc:  # noqa: BLE001 - JSON 500
+                return self._error(500, f"{type(exc).__name__}: {exc}")
         m = re.fullmatch(r"/campaigns/([\w-]+)/(cancel|resume)", path)
         if m:
             cid, action = m.group(1), m.group(2)
@@ -191,22 +224,26 @@ def serve(manager, host="127.0.0.1", port=8177, *, quiet=False) -> None:
 
 
 class Client:
-    """Minimal urllib client for the service API."""
+    """Minimal stdlib client for the service API.
 
-    def __init__(self, base: str):
+    Rides ``repro.fleet.http.request_json``: GETs retry transient
+    transport errors and 429/5xx with exponential backoff + jitter;
+    POSTs are NOT retried (``retries=0``) because campaign submission
+    is not idempotent — a retried submit after a torn response would
+    start a second campaign."""
+
+    def __init__(self, base: str, *, timeout: float = 600.0, retries: int = 4):
         self.base = base.rstrip("/")
+        self.timeout = float(timeout)
+        self.retries = int(retries)
 
     def _req(self, path: str, payload: Optional[Dict] = None):
-        url = self.base + path
-        if payload is None:
-            req = urllib.request.Request(url)
-        else:
-            req = urllib.request.Request(
-                url, data=json.dumps(payload).encode(),
-                headers={"Content-Type": "application/json"}, method="POST",
-            )
-        with urllib.request.urlopen(req, timeout=600) as resp:
-            return json.loads(resp.read())
+        from ..fleet.http import request_json
+
+        return request_json(
+            self.base + path, payload, timeout=self.timeout,
+            retries=self.retries if payload is None else 0,
+        )
 
     def submit(self, **spec) -> str:
         return self._req("/campaigns", spec)["id"]

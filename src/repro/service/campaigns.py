@@ -464,6 +464,10 @@ class CampaignManager:
         eval_backend: str = "thread",
         process_workers: Optional[int] = None,
         chunk_size: Optional[int] = None,
+        fleet_fallback: str = "thread",
+        lease_ttl_s: float = 30.0,
+        heartbeat_ttl_s: float = 15.0,
+        fleet_chunk: Optional[int] = None,
         campaign_workers: int = 2,
         hier_workers: int = 1,
         max_batch: int = 32,
@@ -492,6 +496,9 @@ class CampaignManager:
             max_batch=max_batch, max_wait_s=max_wait_s,
             backend=eval_backend, process_workers=process_workers,
             chunk_size=chunk_size,
+            fleet_fallback=fleet_fallback,
+            lease_ttl_s=lease_ttl_s, heartbeat_ttl_s=heartbeat_ttl_s,
+            fleet_chunk=fleet_chunk,
             synth_cache_path=getattr(self.synth_cache, "path", None),
         )
         self.registry = SurrogateRegistry()

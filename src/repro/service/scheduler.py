@@ -23,8 +23,11 @@ labels in-process on the dispatching worker thread (fine for cheap
 contexts); ``"process"`` fans the batch out to a spawn-safe worker
 process pool (``workers.ProcessPoolLabeler``) — the only way the
 GIL-bound behavioral simulation and GIL-holding XLA tracing actually
-parallelize.  Contexts the process pool cannot rebuild by name fall
-back to the in-process path transparently.
+parallelize.  ``"fleet"`` leases batches to remote workers registered
+with the embedded ``repro.fleet`` orchestrator (multi-HOST labeling);
+``fleet_fallback`` picks what runs a batch when the fleet is empty or
+the context is not portable.  Contexts a fresh process/host cannot
+rebuild by name fall back to the in-process path transparently.
 """
 
 from __future__ import annotations
@@ -102,17 +105,37 @@ class EvalScheduler:
         process_workers: Optional[int] = None,
         chunk_size: Optional[int] = None,
         synth_cache_path: Optional[str] = None,
+        fleet: Optional[object] = None,
+        fleet_fallback: str = "thread",
+        lease_ttl_s: float = 30.0,
+        heartbeat_ttl_s: float = 15.0,
+        fleet_chunk: Optional[int] = None,
     ):
-        if backend not in ("thread", "process"):
+        if backend not in ("thread", "process", "fleet"):
             raise ValueError(
-                f"backend must be 'thread' or 'process', got {backend!r}"
+                f"backend must be 'thread', 'process' or 'fleet', "
+                f"got {backend!r}"
+            )
+        if fleet_fallback not in ("thread", "process"):
+            raise ValueError(
+                f"fleet_fallback must be 'thread' or 'process', "
+                f"got {fleet_fallback!r}"
             )
         self.store = store
         self.backend = backend
         self.max_batch = int(max_batch)
         self.max_wait_s = float(max_wait_s)
         self._proc = None
-        if backend == "process":
+        self.fleet = None
+        if backend == "fleet":
+            from ..fleet.orchestrator import FleetCoordinator
+
+            self.fleet = fleet if fleet is not None else FleetCoordinator(
+                lease_ttl_s=lease_ttl_s, heartbeat_ttl_s=heartbeat_ttl_s,
+                chunk_size=fleet_chunk,
+            )
+        if backend == "process" or (backend == "fleet"
+                                    and fleet_fallback == "process"):
             from .workers import ProcessPoolLabeler
 
             self._proc = ProcessPoolLabeler(
@@ -122,6 +145,8 @@ class EvalScheduler:
             )
         self.n_process_batches = 0
         self.n_process_fallbacks = 0
+        self.n_fleet_batches = 0
+        self.n_fleet_fallbacks = 0
         self._pool = ThreadPoolExecutor(n_workers, thread_name_prefix="eval")
         self._cv = threading.Condition()
         self._pending: deque = deque()          # _Entry awaiting dispatch
@@ -274,6 +299,15 @@ class EvalScheduler:
 
     def _ground_truth(self, ctx: EvalContext, genomes: np.ndarray):
         """One batched ground-truth call, on the configured backend."""
+        if self.fleet is not None:
+            # empty fleet / unportable context degrades to the fallback
+            # backend below (counted, so /stats shows the degradation)
+            if self.fleet.eligible(ctx):
+                with self._cv:
+                    self.n_fleet_batches += 1
+                return self.fleet.label(ctx, genomes)
+            with self._cv:
+                self.n_fleet_fallbacks += 1
         if self._proc is not None:
             if self._proc.can_label(ctx):
                 with self._cv:
@@ -329,10 +363,14 @@ class EvalScheduler:
         # workers' synthesis-engine counters); taken outside the cv so a
         # slow pool can't stall submitters
         labeler = self._proc.stats() if self._proc is not None else None
+        fleet = self.fleet.stats() if self.fleet is not None else None
         with self._cv:
             return {
                 "backend": self.backend,
                 "labeler": labeler,
+                "fleet": fleet,
+                "fleet_batches": self.n_fleet_batches,
+                "fleet_fallbacks": self.n_fleet_fallbacks,
                 "process_batches": self.n_process_batches,
                 "process_fallbacks": self.n_process_fallbacks,
                 "requests": self.n_requests,
@@ -371,6 +409,11 @@ class EvalScheduler:
             self._cv.notify_all()
         if wait:
             self._batcher.join(timeout=5)
+        if self.fleet is not None:
+            # first: a pool thread blocked in fleet.label() reclaims its
+            # remaining chunks in-process and returns, so the pool join
+            # below cannot deadlock on a starved fleet
+            self.fleet.shutdown(wait=wait)
         self._pool.shutdown(wait=wait)
         if self._proc is not None:
             self._proc.shutdown(wait=wait)

@@ -24,6 +24,7 @@ Two implementations of the small ``LabelStore`` interface:
 
 from __future__ import annotations
 
+import contextlib
 import hashlib
 import json
 import os
@@ -31,6 +32,11 @@ import threading
 import time
 from dataclasses import dataclass, field
 from typing import Dict, Optional
+
+try:
+    import fcntl
+except ImportError:  # pragma: no cover - non-POSIX
+    fcntl = None
 
 import numpy as np
 
@@ -276,10 +282,12 @@ class JsonlLabelStore(LabelStore):
     O(unique labels).  ``compact()`` rewrites the log with one line per
     key; ``auto_compact_ratio=r`` (opt-in) compacts automatically
     whenever the file holds more than ``r``x as many lines as unique
-    keys.  Compaction assumes no OTHER process is appending at that
-    moment: concurrent writers keep a handle to the replaced inode and
-    their appends would be lost — run it from the store's owning process
-    (the service) or during maintenance."""
+    keys.  Compaction is safe against concurrent writer PROCESSES (the
+    fleet case): appends and the compaction's replay-rewrite-rename all
+    run under one cross-process advisory file lock (``<path>.lock``),
+    and every writer re-checks the backing inode under that lock — a
+    writer whose handle points at a replaced file reopens and rescans
+    instead of appending into the dropped inode."""
 
     def __init__(self, path: str, *, auto_compact_ratio: Optional[float] = None):
         super().__init__()
@@ -291,18 +299,46 @@ class JsonlLabelStore(LabelStore):
         self._data: Dict[str, Dict[str, float]] = {}
         self._offset = 0  # bytes already replayed; refresh parses the tail
         self._n_lines = 0  # complete lines in the file (incl. duplicates)
+        self._ino: Optional[int] = None  # inode the offset refers to
         os.makedirs(os.path.dirname(os.path.abspath(self.path)), exist_ok=True)
         # append handle; opened lazily on first put
         self._fh = None
         self._replay()
         self._maybe_auto_compact()
 
+    @contextlib.contextmanager
+    def _write_lock(self):
+        """Cross-process advisory lock serializing appends with
+        compaction (``flock`` on a sidecar, so lock acquisition never
+        touches — or keeps alive — the replaced data inode)."""
+        if fcntl is None:  # pragma: no cover - non-POSIX
+            yield
+            return
+        with open(self.path + ".lock", "a+") as lk:
+            fcntl.flock(lk.fileno(), fcntl.LOCK_EX)
+            try:
+                yield
+            finally:
+                fcntl.flock(lk.fileno(), fcntl.LOCK_UN)
+
     def _replay(self) -> None:
         """Parse records appended since the last replay (tail-seek, so a
-        refresh is O(new bytes), not O(file))."""
+        refresh is O(new bytes), not O(file)).  Detects a compaction by
+        another process (inode change) and rescans the new file from the
+        top — the index is keyed, so re-reading is idempotent."""
         if not os.path.exists(self.path):
             return
         with open(self.path) as f:
+            ino = os.fstat(f.fileno()).st_ino
+            if self._ino is not None and ino != self._ino:
+                # the path was atomically replaced under us: our offset
+                # and line count describe the old inode
+                self._offset = 0
+                self._n_lines = 0
+                if self._fh is not None:
+                    self._fh.close()
+                    self._fh = None
+            self._ino = ino
             f.seek(self._offset)
             while True:
                 pos = f.tell()
@@ -335,21 +371,29 @@ class JsonlLabelStore(LabelStore):
             return self._compact_locked()
 
     def _compact_locked(self) -> int:
-        dropped = max(self._n_lines - len(self._data), 0)
-        if self._fh is not None:
-            self._fh.close()
-            self._fh = None
-        tmp = self.path + ".compact.tmp"
-        with open(tmp, "w") as f:
-            now = time.time()
-            for k, rec in self._data.items():
-                f.write(json.dumps({"k": k, "l": rec, "t": now},
-                                   sort_keys=True) + "\n")
-            f.flush()
-            os.fsync(f.fileno())
-        os.replace(tmp, self.path)
-        self._offset = os.path.getsize(self.path)
-        self._n_lines = len(self._data)
+        # the write lock spans replay -> rewrite -> rename: concurrent
+        # appender processes either land before the replay (and are
+        # folded into the compacted file) or block until the rename is
+        # visible (and their next append detects the new inode) — no
+        # torn tail, no dropped foreign records
+        with self._write_lock():
+            self._replay()
+            dropped = max(self._n_lines - len(self._data), 0)
+            if self._fh is not None:
+                self._fh.close()
+                self._fh = None
+            tmp = self.path + ".compact.tmp"
+            with open(tmp, "w") as f:
+                now = time.time()
+                for k, rec in self._data.items():
+                    f.write(json.dumps({"k": k, "l": rec, "t": now},
+                                       sort_keys=True) + "\n")
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, self.path)
+            self._offset = os.path.getsize(self.path)
+            self._n_lines = len(self._data)
+            self._ino = os.stat(self.path).st_ino
         self.compactions += 1
         return dropped
 
@@ -379,21 +423,24 @@ class JsonlLabelStore(LabelStore):
                 fresh.append((key, rec))
         if not fresh:
             return
-        if self._fh is None:
-            self._fh = open(self.path, "a")
-        # consume any foreign tail BEFORE appending, so advancing the
-        # offset below cannot skip another process's records; advancing
-        # it keeps our own appends from being re-replayed (and
-        # re-counted) by the next refresh
-        self._replay()
-        now = time.time()
-        self._fh.write("".join(
-            json.dumps({"k": key, "l": rec, "t": now}, sort_keys=True) + "\n"
-            for key, rec in fresh
-        ))
-        self._fh.flush()
-        self._n_lines += len(fresh)
-        self._offset = self._fh.tell()
+        # the cross-process lock makes append-vs-compact atomic: the
+        # replay consumes any foreign tail (and detects a compaction's
+        # inode swap, reopening the handle) BEFORE we append, so
+        # advancing the offset below cannot skip another process's
+        # records and our records cannot land in a dropped inode
+        with self._write_lock():
+            self._replay()
+            if self._fh is None:
+                self._fh = open(self.path, "a")
+            now = time.time()
+            self._fh.write("".join(
+                json.dumps({"k": key, "l": rec, "t": now},
+                           sort_keys=True) + "\n"
+                for key, rec in fresh
+            ))
+            self._fh.flush()
+            self._n_lines += len(fresh)
+            self._offset = self._fh.tell()
 
     def _len(self):
         return len(self._data)

@@ -168,28 +168,16 @@ class ProcessPoolLabeler:
     def can_label(self, ctx: EvalContext) -> bool:
         """True iff a fresh process, given only ``ctx.accel.name``, would
         rebuild a context with the SAME fingerprint (identical labels and
-        store keys).  Cached per fingerprint."""
+        store keys).  Cached per fingerprint.  The check itself is the
+        fleet's portability gate — one rule decides what may cross a
+        process OR host boundary."""
         fp = ctx.fingerprint
         with self._lock:
             if fp in self._safe_fps:
                 return self._safe_fps[fp]
-        verdict = False
-        try:
-            from ..core.acl.library import default_library
-            from .campaigns import make_accelerator
+        from ..fleet.protocol import context_is_portable
 
-            name = getattr(ctx.accel, "name", None)
-            if name:
-                ref = EvalContext(
-                    make_accelerator(name, builtin_only=True),
-                    default_library(),
-                    rank_genes=ctx.rank_genes,
-                    n_qor_samples=ctx.n_qor_samples,
-                    qor_seed=ctx.qor_seed,
-                )
-                verdict = ref.fingerprint == fp
-        except Exception:  # noqa: BLE001 - unresolvable name == not safe
-            verdict = False
+        verdict = context_is_portable(ctx)
         with self._lock:
             self._safe_fps[fp] = verdict
         return verdict

@@ -1,0 +1,509 @@
+"""Multi-host labeling fleet: retrying HTTP helper, coordinator
+lease/requeue state machine, zero-loss worker kill (byte-identical
+front), elastic mid-campaign join, and empty-fleet degradation."""
+
+import json
+import os
+import signal
+import subprocess
+import sys
+import threading
+import time
+import types
+
+import numpy as np
+import pytest
+
+from repro.accel import MCMAccelerator
+from repro.core.acl.library import default_library
+from repro.fleet import (
+    FleetCoordinator,
+    HttpError,
+    context_is_portable,
+    encode_labels,
+    request_json,
+    serve_fleet,
+)
+from repro.service import (
+    CampaignManager,
+    CampaignSpec,
+    EvalContext,
+    EvalScheduler,
+    InMemoryLabelStore,
+)
+from repro.service.api import make_server
+from repro.service.store import LABEL_KEYS
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+# label keys that are a pure function of (context, genome) — timing keys
+# (synth_time / sim_time) legitimately differ between runs/backends
+DET_KEYS = ("qor", "latency", "energy", "flops", "hbm_bytes")
+
+SMALL = dict(n_train=10, n_qor_samples=2, pop_size=8, n_parents=4,
+             n_generations=3)
+
+
+def _wait_for(pred, timeout=60.0, every=0.01, what="condition"):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if pred():
+            return
+        time.sleep(every)
+    raise AssertionError(f"timed out waiting for {what}")
+
+
+# ---------------------------------------------------------------------------
+# http helper
+# ---------------------------------------------------------------------------
+
+def _flaky_server(script):
+    """A one-route HTTP server that pops (status, body) pairs per hit."""
+    from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+    hits = []
+
+    class Handler(BaseHTTPRequestHandler):
+        def log_message(self, *a):
+            pass
+
+        def _serve(self):
+            status, body = script[min(len(hits), len(script) - 1)]
+            hits.append(self.path)
+            payload = json.dumps(body).encode()
+            self.send_response(status)
+            self.send_header("Content-Type", "application/json")
+            self.send_header("Content-Length", str(len(payload)))
+            self.end_headers()
+            self.wfile.write(payload)
+
+        do_GET = do_POST = lambda self: self._serve()  # noqa: E731
+
+    srv = ThreadingHTTPServer(("127.0.0.1", 0), Handler)
+    threading.Thread(target=srv.serve_forever, daemon=True).start()
+    return srv, f"http://127.0.0.1:{srv.server_address[1]}", hits
+
+
+def test_request_json_retries_transient_statuses():
+    srv, base, hits = _flaky_server([
+        (503, {"error": "warming up"}),
+        (503, {"error": "warming up"}),
+        (200, {"ok": True}),
+    ])
+    try:
+        out = request_json(base + "/x", retries=4, backoff_s=0.01,
+                           backoff_max_s=0.02)
+        assert out == {"ok": True} and len(hits) == 3
+    finally:
+        srv.shutdown()
+
+
+def test_request_json_does_not_retry_client_errors():
+    srv, base, hits = _flaky_server([(404, {"error": "no route"})])
+    try:
+        with pytest.raises(HttpError) as ei:
+            request_json(base + "/x", retries=4, backoff_s=0.01)
+        assert ei.value.code == 404 and "no route" in ei.value.detail
+        assert len(hits) == 1                      # no retry on 4xx
+        # and it is still catchable as plain urllib.error.HTTPError
+        import urllib.error
+
+        assert isinstance(ei.value, urllib.error.HTTPError)
+    finally:
+        srv.shutdown()
+
+
+def test_request_json_retries_exhausted_connection_refused():
+    t0 = time.monotonic()
+    with pytest.raises(HttpError) as ei:
+        request_json("http://127.0.0.1:1/x", retries=2, backoff_s=0.01,
+                     backoff_max_s=0.02, timeout=0.5)
+    assert ei.value.code is None                   # transport, not HTTP
+    assert time.monotonic() - t0 < 30
+
+
+def test_request_json_zero_retries_is_single_shot():
+    srv, base, hits = _flaky_server([(503, {"error": "busy"})])
+    try:
+        with pytest.raises(HttpError):
+            request_json(base + "/x", {"a": 1}, retries=0)
+        assert len(hits) == 1
+    finally:
+        srv.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# coordinator state machine (fake contexts: no synthesis, no sockets)
+# ---------------------------------------------------------------------------
+
+def _fake_ctx(fp="fp-test"):
+    ctx = types.SimpleNamespace(
+        accel=types.SimpleNamespace(name="mcm1"),
+        rank_genes=False, n_qor_samples=2, qor_seed=0, fingerprint=fp,
+    )
+
+    def ground_truth(genomes):
+        g = np.atleast_2d(genomes)
+        v = g.sum(axis=1).astype(np.float64)
+        return {k: v * (i + 1) for i, k in enumerate(LABEL_KEYS)}
+
+    ctx.ground_truth = ground_truth
+    return ctx
+
+
+def _serve_leases(coord, wid, *, n=None, delay=0.0, drop_result=False):
+    """Fake remote worker: poll leases and answer with ground truth.
+    ``n=None`` serves until the coordinator shuts down."""
+    served = 0
+    while n is None or served < n:
+        if coord._stopped:
+            return served
+        resp = coord.lease({"worker": wid})
+        lease = resp.get("lease")
+        if lease is None:
+            time.sleep(0.005)
+            continue
+        served += 1
+        if delay:
+            time.sleep(delay)
+        if drop_result:
+            continue                          # simulates a kill -9
+        labels = _fake_ctx().ground_truth(np.asarray(lease["genomes"]))
+        coord.result({"worker": wid, "lease": lease["id"],
+                      "labels": encode_labels(labels)})
+    return served
+
+
+def test_coordinator_roundtrip_and_stats():
+    coord = FleetCoordinator(lease_ttl_s=5.0, heartbeat_ttl_s=5.0)
+    reg = coord.register({"worker": "w0", "host": "h", "pid": 1,
+                          "accels": ["*"]})
+    assert reg["ok"] and reg["worker"] == "w0"
+    ctx = _fake_ctx()
+    genomes = np.arange(24).reshape(12, 2)
+
+    t = threading.Thread(target=_serve_leases, args=(coord, "w0"),
+                         kwargs={"n": None}, daemon=True)
+    t.start()
+    out = coord.label(ctx, genomes)
+    ref = ctx.ground_truth(genomes)
+    for k in LABEL_KEYS:
+        assert np.array_equal(out[k], ref[k])
+
+    s = coord.stats()
+    assert s["live"] == 1 and s["batches"] == 1
+    assert s["remote_labels"] == 12 and s["local_labels"] == 0
+    assert s["requeues"] == 0
+    assert s["workers"]["w0"]["labels"] == 12
+    assert s["workers"]["w0"]["alive"]
+    coord.shutdown()
+
+
+def test_lease_expiry_requeues_to_surviving_worker():
+    """A worker that leases a chunk and dies silently (kill -9): the
+    lease expires, the chunk requeues, a surviving worker completes it,
+    and the batch result is identical to plain ground truth."""
+    coord = FleetCoordinator(lease_ttl_s=0.3, heartbeat_ttl_s=60.0)
+    coord.register({"worker": "dead", "accels": ["*"]})
+    coord.register({"worker": "live", "accels": ["*"]})
+    ctx = _fake_ctx()
+    genomes = np.arange(16).reshape(8, 2)
+
+    # the doomed worker grabs leases and never answers
+    threading.Thread(target=_serve_leases, args=(coord, "dead"),
+                     kwargs={"n": 2, "drop_result": True},
+                     daemon=True).start()
+    # the survivor starts polling only after the leases are gone
+    def survivor():
+        time.sleep(0.1)
+        _serve_leases(coord, "live", n=None)
+
+    threading.Thread(target=survivor, daemon=True).start()
+    out = coord.label(ctx, genomes)
+    ref = ctx.ground_truth(genomes)
+    for k in LABEL_KEYS:
+        assert np.array_equal(out[k], ref[k])
+    s = coord.stats()
+    assert s["requeues"] >= 1 and s["expired_leases"] >= 1
+    assert s["workers"]["live"]["labels"] >= 1
+    coord.shutdown()
+
+
+def test_heartbeat_expiry_kills_worker_and_reclaims_locally():
+    """Heartbeat silence declares the worker dead; with no live worker
+    left the blocked label() reclaims every chunk in-process."""
+    coord = FleetCoordinator(lease_ttl_s=60.0, heartbeat_ttl_s=0.3)
+    coord.register({"worker": "w0", "accels": ["*"]})
+    ctx = _fake_ctx()
+    genomes = np.arange(8).reshape(4, 2)
+    # w0 leases one chunk then goes silent; no other worker exists
+    threading.Thread(target=_serve_leases, args=(coord, "w0"),
+                     kwargs={"n": 1, "drop_result": True},
+                     daemon=True).start()
+    out = coord.label(ctx, genomes)
+    ref = ctx.ground_truth(genomes)
+    for k in LABEL_KEYS:
+        assert np.array_equal(out[k], ref[k])
+    s = coord.stats()
+    assert s["live"] == 0 and s["dead_workers"] == 1
+    assert s["local_labels"] == 4 and s["remote_labels"] == 0
+    # a heartbeat from the declared-dead worker is told to re-register
+    assert coord.heartbeat({"worker": "w0"}) == {"ok": False,
+                                                 "reregister": True}
+    coord.shutdown()
+
+
+def test_late_duplicate_result_is_dropped():
+    """At-most-once commit: a late result from a presumed-dead worker
+    lands after the requeued copy completed — it must change nothing."""
+    coord = FleetCoordinator(lease_ttl_s=0.2, heartbeat_ttl_s=60.0,
+                             chunk_size=100)   # one chunk per batch
+    coord.register({"worker": "slow", "accels": ["*"]})
+    coord.register({"worker": "fast", "accels": ["*"]})
+    ctx = _fake_ctx()
+    genomes = np.arange(8).reshape(4, 2)
+
+    resp = coord.lease({"worker": "slow"})     # slow takes THE chunk...
+    lease_box = {}
+
+    def run_label():
+        lease_box["out"] = coord.label(ctx, genomes)
+
+    # label() must be running before lease() has work to hand out, so
+    # grab the lease after the batch is enqueued
+    t = threading.Thread(target=run_label, daemon=True)
+    t.start()
+    _wait_for(lambda: coord.lease({"worker": "slow"}).get("lease")
+              is not None or lease_box.get("out"),
+              what="slow worker to lease the chunk")
+    # ...the lease expires and fast serves the requeue
+    _serve_leases(coord, "fast", n=1)
+    t.join(timeout=30)
+    assert "out" in lease_box
+
+    # slow finally reports, against a retired lease id it never knew
+    # expired; fabricate the report through the protocol
+    before = coord.stats()["duplicate_results"]
+    stale = [lid for lid in list(coord._retired)]
+    labels = encode_labels(ctx.ground_truth(genomes))
+    for lid in stale:
+        coord.result({"worker": "slow", "lease": lid, "labels": labels})
+    after = coord.stats()
+    assert after["duplicate_results"] >= before
+    ref = ctx.ground_truth(genomes)
+    for k in LABEL_KEYS:
+        assert np.array_equal(lease_box["out"][k], ref[k])
+    coord.shutdown()
+
+
+def test_fingerprint_drift_rejection_pins_worker_then_fleet():
+    coord = FleetCoordinator(lease_ttl_s=5.0, heartbeat_ttl_s=60.0)
+    coord.register({"worker": "w0", "accels": ["*"]})
+    ctx = _fake_ctx(fp="fp-drifty")
+    genomes = np.arange(4).reshape(2, 2)
+
+    def reject_all():
+        while True:
+            resp = coord.lease({"worker": "w0"})
+            lease = resp.get("lease")
+            if lease is None:
+                if coord.stats()["drifted_fingerprints"]:
+                    return
+                time.sleep(0.005)
+                continue
+            coord.result({"worker": "w0", "lease": lease["id"],
+                          "reject": True, "error": "fingerprint drift"})
+
+    threading.Thread(target=reject_all, daemon=True).start()
+    out = coord.label(ctx, genomes)           # completes via local reclaim
+    ref = ctx.ground_truth(genomes)
+    for k in LABEL_KEYS:
+        assert np.array_equal(out[k], ref[k])
+    s = coord.stats()
+    assert s["drifted_fingerprints"] == 1
+    # the drifted fp no longer leases to w0
+    w = coord._workers["w0"]
+    assert not w.can_serve({"fingerprint": "fp-drifty", "accel": "mcm1"})
+    coord.shutdown()
+
+
+def test_worker_bye_requeues_immediately():
+    """A polite leave (heartbeat bye) requeues the worker's lease NOW
+    instead of waiting out the heartbeat TTL."""
+    coord = FleetCoordinator(lease_ttl_s=60.0, heartbeat_ttl_s=60.0)
+    coord.register({"worker": "w0", "accels": ["*"]})
+    ctx = _fake_ctx()
+    genomes = np.arange(4).reshape(2, 2)
+    done = {}
+    t = threading.Thread(
+        target=lambda: done.update(out=coord.label(ctx, genomes)),
+        daemon=True)
+    t.start()
+    _wait_for(lambda: coord.lease({"worker": "w0"}).get("lease")
+              is not None, what="w0 to hold a lease")
+    t0 = time.monotonic()
+    assert coord.heartbeat({"worker": "w0", "bye": True})["bye"]
+    t.join(timeout=30)
+    assert "out" in done and time.monotonic() - t0 < 30
+    assert coord.stats()["live"] == 0
+    coord.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# scheduler integration: empty fleet degrades to the in-process backend
+# ---------------------------------------------------------------------------
+
+def test_empty_fleet_falls_back_to_process_backend():
+    lib = default_library()
+    ctx = EvalContext(MCMAccelerator(1), lib, n_qor_samples=2)
+    sched = EvalScheduler(InMemoryLabelStore(), n_workers=2,
+                          backend="fleet", fleet_fallback="process",
+                          process_workers=1, max_wait_s=0.005)
+    try:
+        g = ctx.accel.exact_genome(lib)
+        genomes = np.tile(g, (3, 1))
+        genomes[:, 0] = [0, 1, 2]
+        out = sched.label(ctx, genomes)
+        ref = ctx.ground_truth(genomes)
+        for k in DET_KEYS:
+            assert np.array_equal(out[k], ref[k])
+        s = sched.stats()
+        assert s["fleet_fallbacks"] >= 1 and s["fleet_batches"] == 0
+        assert s["fleet"]["registered"] == 0
+        assert s["labeler"]["labeled"] == 3     # the process pool ran it
+    finally:
+        sched.shutdown()
+
+
+def test_unportable_context_stays_off_the_fleet():
+    """A context the portability gate rejects must never be leased, even
+    with live workers."""
+    lib = default_library()
+    sub = lib.subset([c.name for c in lib.circuits[:40]])
+    ctx = EvalContext(MCMAccelerator(1), sub, n_qor_samples=2)
+    assert not context_is_portable(ctx)
+    coord = FleetCoordinator()
+    coord.register({"worker": "w0", "accels": ["*"]})
+    assert not coord.eligible(ctx)
+
+
+# ---------------------------------------------------------------------------
+# end to end over real HTTP: kill -9 mid-campaign, elastic join,
+# byte-identical front
+# ---------------------------------------------------------------------------
+
+def _spawn_worker(base, wid, store=None):
+    cmd = [sys.executable, "-m", "repro.fleet.worker",
+           "--orchestrator", base, "--id", wid, "--no-warm",
+           "--max-idle-s", "120"]
+    if store:
+        cmd += ["--store", store]
+    return subprocess.Popen(
+        cmd, stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL,
+        env={**os.environ, "PYTHONPATH": SRC},
+    )
+
+
+def test_kill9_mid_campaign_front_is_byte_identical():
+    """The fleet acceptance invariant: a worker kill -9 mid-batch plus
+    an elastic join halfway through must not change ONE byte of the
+    campaign's front versus the plain single-process run."""
+    spec = CampaignSpec(accel="mcm1", **SMALL)
+    # single-host reference: the SAME campaign path, thread backend
+    ref_mgr = CampaignManager(eval_workers=2, campaign_workers=1)
+    ref_cid = ref_mgr.submit(spec)
+    assert ref_mgr.wait(ref_cid, timeout=600) == "done"
+    ref = ref_mgr.result(ref_cid)
+    ref_mgr.shutdown()
+
+    mgr = CampaignManager(eval_workers=2, campaign_workers=1,
+                          eval_backend="fleet",
+                          lease_ttl_s=3.0, heartbeat_ttl_s=3.0)
+    srv = make_server(mgr, port=0)
+    threading.Thread(target=srv.serve_forever, daemon=True).start()
+    base = f"http://127.0.0.1:{srv.server_address[1]}"
+    fleet = mgr.scheduler.fleet
+    procs = []
+    try:
+        procs.append(_spawn_worker(base, "wA"))
+        _wait_for(lambda: fleet.stats()["live"] >= 1, timeout=120,
+                  what="worker A to register")
+
+        cid = mgr.submit(spec)
+        # elastic join: worker B starts only after the campaign is
+        # already labeling on worker A
+        _wait_for(lambda: fleet.stats()["batches"] >= 1, timeout=120,
+                  what="first fleet batch")
+        procs.append(_spawn_worker(base, "wB"))
+        _wait_for(lambda: fleet.stats()["live"] >= 2, timeout=120,
+                  what="worker B to register")
+
+        # kill -9 worker A the moment IT holds a lease (B keeps serving);
+        # that chunk can then only complete via expiry -> requeue
+        def a_holds_lease():
+            with fleet._cv:
+                return any(l.worker == "wA" for l in fleet._leases.values())
+        _wait_for(a_holds_lease, timeout=120, every=0.002,
+                  what="worker A to hold a lease")
+        procs[0].send_signal(signal.SIGKILL)
+
+        assert mgr.wait(cid, timeout=600) == "done"
+        res = mgr.result(cid)
+        # byte-identical front: genomes AND objectives
+        assert np.array_equal(ref.front_genomes, res.front_genomes)
+        assert np.array_equal(ref.front_objectives, res.front_objectives)
+
+        s = fleet.stats()
+        assert s["remote_labels"] > 0           # the fleet did real work
+        assert s["workers"]["wB"]["labels"] > 0  # the late joiner served
+        # the killed worker's in-flight lease expired and requeued —
+        # the campaign could not have completed otherwise
+        assert s["expired_leases"] >= 1 and s["requeues"] >= 1
+        # B's continued polling notices A's heartbeat silence
+        _wait_for(lambda: fleet.stats()["dead_workers"] >= 1, timeout=30,
+                  what="the kill to be noticed via heartbeat expiry")
+    finally:
+        for p in procs:
+            if p.poll() is None:
+                p.kill()
+        srv.shutdown()
+        mgr.shutdown()
+
+
+def test_fleet_worker_warm_starts_from_shared_store(tmp_path):
+    """A worker pointed at the shared JSONL store answers already-known
+    genomes from its replica instead of recomputing."""
+    from repro.service import JsonlLabelStore
+
+    path = str(tmp_path / "labels.jsonl")
+    lib = default_library()
+    ctx = EvalContext(MCMAccelerator(1), lib, n_qor_samples=2)
+    g = ctx.accel.exact_genome(lib)
+    genomes = np.tile(g, (4, 1))
+    genomes[:, 0] = [0, 1, 2, 3]
+    # pre-label everything into the shared store
+    labels = ctx.ground_truth(genomes)
+    store = JsonlLabelStore(path)
+    store.put_many(
+        (ctx.key(genomes[i]), {k: labels[k][i] for k in LABEL_KEYS})
+        for i in range(len(genomes))
+    )
+    store.close()
+
+    coord = FleetCoordinator(lease_ttl_s=30.0, heartbeat_ttl_s=30.0)
+    srv = serve_fleet(coord, port=0)
+    base = f"http://127.0.0.1:{srv.server_address[1]}"
+    proc = _spawn_worker(base, "warm", store=path)
+    try:
+        _wait_for(lambda: coord.stats()["live"] >= 1, timeout=120,
+                  what="warm worker to register")
+        out = coord.label(ctx, genomes)
+        for k in DET_KEYS:
+            assert np.array_equal(out[k], labels[k])
+        s = coord.stats()
+        assert s["workers"]["warm"]["store_hits"] == 4
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+        srv.shutdown()
+        coord.shutdown()

@@ -184,6 +184,62 @@ def test_store_auto_compact(tmp_path):
         JsonlLabelStore(path, auto_compact_ratio=0.5)
 
 
+def test_store_compact_races_concurrent_writer_processes(tmp_path):
+    """Regression (fleet satellite): compact() racing concurrent
+    appender PROCESSES must not drop records.  Before the cross-process
+    write lock, the compaction's read-rewrite-rename could miss a torn
+    tail another writer was mid-append on (or strand its next appends in
+    the dropped inode).  Two subprocess writers append disjoint key
+    ranges while the parent compacts in a loop; every key must survive
+    in the final file."""
+    path = str(tmp_path / "labels.jsonl")
+    rec = {k: 1.0 for k in LABEL_KEYS}
+    n_keys, n_writers = 120, 2
+
+    writer = textwrap.dedent("""
+        import sys
+        from repro.service import JsonlLabelStore
+        from repro.service.store import LABEL_KEYS
+        path, wid, n = sys.argv[1], int(sys.argv[2]), int(sys.argv[3])
+        rec = {k: 1.0 for k in LABEL_KEYS}
+        store = JsonlLabelStore(path)
+        for i in range(n):
+            store.put(f"w{wid}-k{i}", rec)
+        store.close()
+        print("DONE", wid)
+    """)
+    procs = [
+        subprocess.Popen(
+            [sys.executable, "-c", writer, path, str(w), str(n_keys)],
+            stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
+            env={**os.environ, "PYTHONPATH": SRC},
+        )
+        for w in range(n_writers)
+    ]
+    compactor = JsonlLabelStore(path)
+    deadline = time.time() + 300
+    while any(p.poll() is None for p in procs) and time.time() < deadline:
+        compactor.compact()
+        time.sleep(0.002)
+    for p in procs:
+        out, err = p.communicate(timeout=60)
+        assert p.returncode == 0, err[-2000:]
+        assert "DONE" in out
+    compactor.refresh()
+    expected = {f"w{w}-k{i}" for w in range(n_writers) for i in range(n_keys)}
+    assert {k for k in expected if compactor.get(k) is not None} == expected
+    # a final compaction leaves exactly one line per key on disk
+    compactor.compact()
+    with open(path) as f:
+        lines = f.readlines()
+    assert len(lines) == len(expected)
+    compactor.close()
+
+    fresh = JsonlLabelStore(path)
+    assert len(fresh) == len(expected)
+    fresh.close()
+
+
 def test_context_fingerprint_sensitivity(ctx):
     lib = default_library()
     base = ctx.fingerprint
@@ -415,9 +471,13 @@ def test_campaign_retention_compacts_and_drops():
     mgr = CampaignManager(eval_workers=2, campaign_workers=1,
                           keep_results=1, keep_campaigns=2)
     spec = CampaignSpec(accel="mcm2", **SMALL)
-    cids = [mgr.submit(spec) for _ in range(3)]
-    for cid in cids:
+    # submit sequentially: retention evicts by FINISH order, which under
+    # concurrent stepping is not necessarily submit order
+    cids = []
+    for _ in range(3):
+        cid = mgr.submit(spec)
         assert mgr.wait(cid, timeout=600) == "done"
+        cids.append(cid)
 
     with pytest.raises(KeyError):
         mgr.status(cids[0])                       # dropped
