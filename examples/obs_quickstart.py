@@ -1,0 +1,115 @@
+"""Flight-recorder quickstart: trace, metrics and timeline for one DSE
+campaign.
+
+    PYTHONPATH=src python examples/obs_quickstart.py
+
+Runs a small campaign with the span sink enabled, then shows the three
+observability surfaces the service exposes:
+
+  1. the JSONL span sink + ``python -m repro.obs.export --chrome-trace``
+     -> a Perfetto-loadable trace where every scheduler tick, label
+     batch and synth compile correlates to the campaign's trace id;
+  2. ``GET /metrics`` — Prometheus text exposition of the scheduler/
+     labeler/store/synth counters (parsed and sanity-checked here with
+     a ~15-line stdlib parser);
+  3. ``GET /campaigns/<id>/timeline`` — per-tick hypervolume, front
+     size and label accounting sampled live while the campaign ran.
+
+Set REPRO_SMOKE=1 for the CI-sized fast mode."""
+
+import json
+import os
+import re
+import sys
+import tempfile
+import threading
+import urllib.request
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro import obs
+from repro.obs.export import main as export_main
+from repro.service import CampaignManager, CampaignSpec
+from repro.service.api import make_server
+
+SMOKE = bool(os.environ.get("REPRO_SMOKE"))
+
+_SAMPLE_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*(\{[^}]*\})? [^ ]+$")
+
+
+def parse_prometheus(text):
+    """Tiny exposition-format parser: {sample_name: float}."""
+    out = {}
+    for line in text.splitlines():
+        if not line or line.startswith("#"):
+            continue
+        assert _SAMPLE_RE.match(line), f"bad prometheus line: {line!r}"
+        name, _, value = line.rpartition(" ")
+        out[name] = float(value)
+    return out
+
+
+def main():
+    run_dir = os.environ.get("REPRO_OBS_DEMO_DIR")
+    if run_dir:
+        os.makedirs(run_dir, exist_ok=True)
+    else:
+        run_dir = tempfile.mkdtemp(prefix="obs_demo_")
+    sink = os.path.join(run_dir, "dse.trace.jsonl")
+    obs.set_sink(sink)
+    obs.setup_logging("info")
+
+    mgr = CampaignManager(eval_workers=2, campaign_workers=2)
+    srv = make_server(mgr, port=0)
+    threading.Thread(target=srv.serve_forever, daemon=True).start()
+    base = f"http://127.0.0.1:{srv.server_address[1]}"
+
+    spec = CampaignSpec(accel="mcm2",
+                        n_train=10 if SMOKE else 32, n_qor_samples=2,
+                        pop_size=8 if SMOKE else 16,
+                        n_parents=4 if SMOKE else 8,
+                        n_generations=2 if SMOKE else 4)
+    print(f"service on {base}, tracing to {sink}")
+    cid = mgr.submit(spec)
+    state = mgr.wait(cid, timeout=600)
+    assert state == "done", state
+
+    print(f"\n-- GET /campaigns/{cid}/timeline --")
+    tl = json.load(urllib.request.urlopen(f"{base}/campaigns/{cid}/timeline"))
+    assert len(tl["samples"]) >= 3, tl
+    assert any("hypervolume" in s for s in tl["samples"])
+    for s in tl["samples"]:
+        hv = f"hv={s['hypervolume']:.3e}" if "hypervolume" in s else "hv=-"
+        print(f"  t+{s['rel_s']:6.2f}s stage={s.get('stage', '-'):8s} {hv} "
+              f"front={s.get('front_size', '-'):>2} "
+              f"labels={s.get('labels_requested', 0):.0f}")
+
+    print("\n-- GET /metrics (prometheus text) --")
+    text = urllib.request.urlopen(f"{base}/metrics").read().decode()
+    samples = parse_prometheus(text)
+    assert samples["repro_sched_requests_total"] > 0
+    assert samples["repro_sched_batches_total"] > 0
+    for k in ("repro_sched_requests_total", "repro_sched_batches_total",
+              "repro_sched_labeled_total", "repro_store_hits_total"):
+        print(f"  {k} = {samples.get(k, 0):g}")
+    print(f"  ({len(samples)} samples total, all parse)")
+
+    obs.set_sink(None)
+    srv.shutdown()
+    mgr.shutdown()
+
+    print("\n-- python -m repro.obs.export --chrome-trace --")
+    assert export_main([sink, "--chrome-trace"]) == 0
+    out = sink[: -len(".jsonl")][: -len(".trace")] + ".trace.json"
+    doc = json.load(open(out))
+    events = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    names = sorted({e["name"] for e in events})
+    campaign_events = [e for e in events if e["args"].get("trace") == cid]
+    assert campaign_events, "no spans correlated to the campaign"
+    print(f"  {out}: {len(events)} slices, span kinds: {', '.join(names)}")
+    print(f"  {len(campaign_events)} slices correlated to campaign {cid}")
+    print("  open in https://ui.perfetto.dev")
+
+
+if __name__ == "__main__":
+    main()

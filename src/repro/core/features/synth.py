@@ -26,6 +26,7 @@ from typing import TYPE_CHECKING
 
 if TYPE_CHECKING:  # avoid circular import
     from ...accel.base import Accelerator
+from ... import obs
 from ...core.acl.library import Circuit, Library
 from .. import hw
 
@@ -195,18 +196,33 @@ class SynthCache:
         self._by_struct: Dict[str, dict] = {}
         # family digest -> remaining verifications | False (pinned)
         self._verdicts: Dict[str, object] = {}
-        self.hits_identity = 0
-        self.hits_structural = 0
-        self.compiles = 0
-        self.verify_compiles = 0
-        self.pinned_families = 0
+        # registry instruments (idempotent-replace: the live process-
+        # shared cache is the one a /metrics scrape sees); increments
+        # stay under the cache lock they always ran under
+        reg = obs.REGISTRY
+        self.hits_identity = reg.counter(
+            "repro_synth_identity_hits_total",
+            "compiles served from the identity tier")
+        self.hits_structural = reg.counter(
+            "repro_synth_structural_hits_total",
+            "compiles served from the verified structural tier")
+        self.compiles = reg.counter(
+            "repro_synth_compiles_total", "XLA compiles paid")
+        self.verify_compiles = reg.counter(
+            "repro_synth_verify_compiles_total",
+            "compiles spent verifying a structural family")
+        self.pinned_families = reg.counter(
+            "repro_synth_pinned_families_total",
+            "graph families pinned to identity-only caching")
+        self.compile_seconds = reg.histogram(
+            "repro_synth_compile_seconds", "wall seconds per XLA compile")
 
     # -- lookups -------------------------------------------------------
     def get_identity(self, idd: str) -> Optional[dict]:
         with self._lock:
             rec = self._by_id.get(idd)
             if rec is not None:
-                self.hits_identity += 1
+                self.hits_identity.inc()
             return rec
 
     def get_structural(self, sdd: str) -> Optional[dict]:
@@ -218,8 +234,9 @@ class SynthCache:
         """Record one compile: ``rec`` carries k (identity digest),
         flops, hbm_bytes and optionally s (structural digest) + fam."""
         with self._lock:
-            self.compiles += 1
-            self.verify_compiles += int(verify)
+            self.compiles.inc()
+            if verify:
+                self.verify_compiles.inc()
             self._store_locked(dict(rec))
 
     def store_alias(self, rec: dict) -> None:
@@ -227,7 +244,7 @@ class SynthCache:
         another identity compiled.  Counted as a hit, not a compile (and
         persisted, so a warm run answers it from the identity tier)."""
         with self._lock:
-            self.hits_structural += 1
+            self.hits_structural.inc()
             self._store_locked(dict(rec))
 
     def _store_locked(self, rec: dict) -> None:
@@ -252,7 +269,7 @@ class SynthCache:
     def verdict_pin(self, fam: str) -> None:
         with self._lock:
             if self._verdicts.get(fam) is not False:
-                self.pinned_families += 1
+                self.pinned_families.inc()
             self._set_verdict_locked(fam, False)
             # structural records of a pinned family must never serve
             # other identities again
@@ -270,18 +287,20 @@ class SynthCache:
             return len(self._by_id)
 
     def stats(self) -> Dict[str, float]:
+        compiles = int(self.compiles.value)
+        served = int(self.hits_identity.value) + int(
+            self.hits_structural.value)
+        total = served + compiles
         with self._lock:
-            served = self.hits_identity + self.hits_structural
-            total = served + self.compiles
             return {
                 "entries": len(self._by_id),
                 "structures": len(self._by_struct),
-                "compiles": self.compiles,
-                "verify_compiles": self.verify_compiles,
-                "identity_hits": self.hits_identity,
-                "structural_hits": self.hits_structural,
+                "compiles": compiles,
+                "verify_compiles": int(self.verify_compiles.value),
+                "identity_hits": int(self.hits_identity.value),
+                "structural_hits": int(self.hits_structural.value),
                 "hit_rate": (served / total) if total else 0.0,
-                "pinned_families": self.pinned_families,
+                "pinned_families": int(self.pinned_families.value),
                 # v is False means PINNED, not verified — and False == 0
                 # in Python, so the identity check is load-bearing
                 "verified_families": sum(
@@ -658,7 +677,11 @@ def synthesize_batch(
     def _run_compile(idd: str, plan) -> None:
         kind, sdd, fam = plan
         specs = groups[idd][0].specs
-        cost, wall = _compile_identity(accel, specs)
+        with obs.span("synth.compile", kind=kind, identity=idd[:12]):
+            cost, wall = _compile_identity(accel, specs)
+        cs = getattr(scache, "compile_seconds", None)
+        if cs is not None:
+            cs.observe(wall)
         if kind == "verify":
             srec = scache.get_structural(sdd)
             same = (srec is not None
@@ -684,6 +707,11 @@ def synthesize_batch(
     # in waves: every identity that must compile under the current cache
     # state compiles (possibly in parallel), then the remainder re-
     # resolves against the now-warmer cache.
+    batch_span = (
+        obs.start_span("synth.batch", n=n, unique=len(order))
+        if order else None
+    )
+    n_waves = n_compiled = 0
     pending = list(order)
     while pending:
         plans = []
@@ -711,6 +739,8 @@ def synthesize_batch(
             if sdd is not None:
                 seen_struct.add(sdd)
             plans.append((idd, plan))
+        n_waves += 1
+        n_compiled += len(plans)
         if plans:
             if workers > 1 and len(plans) > 1:
                 from concurrent.futures import ThreadPoolExecutor
@@ -723,6 +753,8 @@ def synthesize_batch(
         if not deferred:
             break
         pending = deferred
+    if batch_span is not None:
+        batch_span.end(waves=n_waves, compiled=n_compiled)
 
     # -- pass 3: assemble + scatter ------------------------------------
     done = 0

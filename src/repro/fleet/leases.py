@@ -77,6 +77,7 @@ class Chunk:
     state: str = "pending"          # pending | leased | done
     requeues: int = 0
     worker: Optional[str] = None    # worker that completed it
+    wire: Optional[Dict] = None     # trace context of the owning batch
 
 
 @dataclass
@@ -88,6 +89,7 @@ class Lease:
     worker: str
     issued_at: float
     deadline: float
+    span: Optional[object] = None   # fleet.lease lifecycle span handle
 
 
 class FleetBatch:

@@ -39,6 +39,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from .. import obs
 from .leases import Chunk, FleetBatch, Lease, WorkerRecord
 from .protocol import (
     PROTOCOL_VERSION,
@@ -82,16 +83,37 @@ class FleetCoordinator:
         self._portable: Dict[str, bool] = {}       # ctx fp -> parent-side gate
         self._drifted: set = set()                 # fps every worker rejected
         self._stopped = False
-        # counters
-        self.n_batches = 0
-        self.n_chunks = 0
-        self.n_requeues = 0
-        self.n_expired_leases = 0
-        self.n_dead_workers = 0
-        self.n_duplicate_results = 0
-        self.n_local_chunks = 0
-        self.n_remote_labels = 0
-        self.n_local_labels = 0
+        # counters — registry instruments (scrape-safe without _cv)
+        reg = obs.REGISTRY
+        self.n_batches = reg.counter(
+            "repro_fleet_batches_total", "batches split across the fleet")
+        self.n_chunks = reg.counter(
+            "repro_fleet_chunks_total", "chunks created for leasing")
+        self.n_requeues = reg.counter(
+            "repro_fleet_requeues_total", "chunks requeued after a failure")
+        self.n_expired_leases = reg.counter(
+            "repro_fleet_expired_leases_total",
+            "leases reclaimed on deadline/heartbeat expiry")
+        self.n_dead_workers = reg.counter(
+            "repro_fleet_dead_workers_total",
+            "workers declared dead by heartbeat TTL")
+        self.n_duplicate_results = reg.counter(
+            "repro_fleet_duplicate_results_total",
+            "late/duplicate results dropped idempotently")
+        self.n_local_chunks = reg.counter(
+            "repro_fleet_local_chunks_total",
+            "starved chunks labeled in-process")
+        self.n_remote_labels = reg.counter(
+            "repro_fleet_remote_labels_total", "labels from fleet workers")
+        self.n_local_labels = reg.counter(
+            "repro_fleet_local_labels_total",
+            "labels from the in-process reclaim path")
+        self.live_gauge = reg.gauge(
+            "repro_fleet_live_workers", "workers within heartbeat TTL")
+        self.pending_gauge = reg.gauge(
+            "repro_fleet_pending_chunks", "chunks awaiting a lease")
+        self.leases_gauge = reg.gauge(
+            "repro_fleet_leases_in_flight", "chunks currently leased")
 
     # ------------------------------------------------------------------
     # scheduler-facing
@@ -125,41 +147,54 @@ class FleetCoordinator:
         byte-identical to ``ctx.ground_truth(genomes)``."""
         genomes = np.atleast_2d(np.asarray(genomes, dtype=np.int64))
         desc = ctx_descriptor(ctx)
-        with self._cv:
-            live = sum(w.alive for w in self._workers.values())
-            parts = self._split(len(genomes), live)
-            batch = FleetBatch(ctx, len(parts))
-            chunks = [
-                Chunk(batch=batch, index=i, desc=desc, genomes=genomes[idx])
-                for i, idx in enumerate(parts)
-            ]
-            self._pending.extend(chunks)
-            self.n_batches += 1
-            self.n_chunks += len(chunks)
-            self._cv.notify_all()
-        while True:
-            local: List[Chunk] = []
+        with obs.span("fleet.batch", n=int(len(genomes))) as sp:
+            # chunks carry the batch's trace context so lease-lifecycle
+            # spans (granted on protocol threads) and worker-side spans
+            # link back to the submitting campaign
+            wire = obs.wire_context()
             with self._cv:
-                if batch.remaining == 0:
-                    break
-                self._expire_locked(time.monotonic())
-                local = self._reclaim_locked(batch)
-                if not local and batch.remaining > 0:
-                    self._cv.wait(timeout=self._tick)
-                    continue
-            for chunk in local:
-                # in-process fallback OUTSIDE the lock; complete() drops
-                # a racing late remote result for the same chunk
-                labels = ctx.ground_truth(chunk.genomes)
+                live = sum(w.alive for w in self._workers.values())
+                parts = self._split(len(genomes), live)
+                batch = FleetBatch(ctx, len(parts))
+                chunks = [
+                    Chunk(batch=batch, index=i, desc=desc,
+                          genomes=genomes[idx], wire=wire)
+                    for i, idx in enumerate(parts)
+                ]
+                self._pending.extend(chunks)
+                self.n_batches.inc()
+                self.n_chunks.inc(len(chunks))
+                self.pending_gauge.set(len(self._pending))
+                self._cv.notify_all()
+            sp.set(chunks=len(chunks), live_workers=live)
+            n_local = 0
+            while True:
+                local: List[Chunk] = []
                 with self._cv:
-                    if batch.complete(chunk, {
-                        k: np.asarray(v) for k, v in labels.items()
-                    }):
-                        chunk.worker = None
-                        self.n_local_chunks += 1
-                        self.n_local_labels += len(chunk.genomes)
-                    self._cv.notify_all()
-        return batch.assemble()
+                    if batch.remaining == 0:
+                        break
+                    self._expire_locked(time.monotonic())
+                    local = self._reclaim_locked(batch)
+                    if not local and batch.remaining > 0:
+                        self._cv.wait(timeout=self._tick)
+                        continue
+                for chunk in local:
+                    # in-process fallback OUTSIDE the lock; complete()
+                    # drops a racing late remote result for the chunk
+                    with obs.span("fleet.local",
+                                  n=int(len(chunk.genomes))):
+                        labels = ctx.ground_truth(chunk.genomes)
+                    with self._cv:
+                        if batch.complete(chunk, {
+                            k: np.asarray(v) for k, v in labels.items()
+                        }):
+                            chunk.worker = None
+                            n_local += 1
+                            self.n_local_chunks.inc()
+                            self.n_local_labels.inc(len(chunk.genomes))
+                        self._cv.notify_all()
+            sp.set(local_chunks=n_local)
+            return batch.assemble()
 
     def _split(self, n: int, live_workers: int) -> List[np.ndarray]:
         """Chunking mirrors the process pool: ~2 chunks per live worker
@@ -280,6 +315,16 @@ class FleetCoordinator:
             )
             chunk.state = "leased"
             self._leases[lease.id] = lease
+            self.pending_gauge.set(len(self._pending))
+            self.leases_gauge.set(len(self._leases))
+            # grant→result/expiry lifecycle span, parented to the batch
+            # that created the chunk (this thread is an HTTP handler, so
+            # the ambient context is not the campaign's)
+            with obs.attach(chunk.wire):
+                lease.span = obs.start_span(
+                    "fleet.lease", lease=lease.id, worker=wid,
+                    n=int(len(chunk.genomes)), requeues=chunk.requeues,
+                )
             return {
                 "ok": True,
                 "lease": {
@@ -287,6 +332,7 @@ class FleetCoordinator:
                     "ctx": chunk.desc,
                     "genomes": chunk.genomes.tolist(),
                     "ttl_s": self.lease_ttl_s,
+                    "trace": chunk.wire,
                 },
             }
 
@@ -296,16 +342,25 @@ class FleetCoordinator:
         deterministic, so whichever copy lands first is THE result."""
         wid = str(payload.get("worker", ""))
         lid = str(payload.get("lease", ""))
+        # worker-side spans piggyback on the result payload (the
+        # process-pool idiom): fold them into the local ring/sink
+        spans = payload.get("spans")
+        if spans:
+            obs.recorder().ingest(spans)
         with self._cv:
             w = self._workers.get(wid)
             if w is not None:
                 w.last_seen = time.monotonic()
             lease = self._leases.pop(lid, None) or self._retired.pop(lid, None)
+            self.leases_gauge.set(len(self._leases))
             if lease is None:
-                self.n_duplicate_results += 1
+                self.n_duplicate_results.inc()
                 return {"ok": True, "duplicate": True}
             chunk = lease.chunk
+            lspan, lease.span = lease.span, None
             if payload.get("reject"):
+                if lspan is not None:
+                    lspan.end(outcome="rejected")
                 # fingerprint drift: never lease this fp to this worker
                 # again; once EVERY live worker has rejected it, pin the
                 # fp off the fleet entirely
@@ -322,19 +377,25 @@ class FleetCoordinator:
                 labels = decode_labels(payload.get("labels") or {},
                                        n=len(chunk.genomes))
             except ValueError as exc:
+                if lspan is not None:
+                    lspan.end(outcome="error", error=str(exc)[:120])
                 self._requeue_locked(chunk)
                 self._cv.notify_all()
                 return {"ok": False, "error": str(exc)}
             if chunk.batch.complete(chunk, labels):
                 chunk.worker = wid
-                self.n_remote_labels += len(chunk.genomes)
+                self.n_remote_labels.inc(len(chunk.genomes))
                 if w is not None:
                     w.labels += len(chunk.genomes)
                     w.chunks += 1
                     w.store_hits += int(payload.get("store_hits", 0))
                     w.busy_s += float(payload.get("busy_s", 0.0))
+                if lspan is not None:
+                    lspan.end(outcome="ok")
             else:
-                self.n_duplicate_results += 1
+                self.n_duplicate_results.inc()
+                if lspan is not None:
+                    lspan.end(outcome="duplicate")
             self._cv.notify_all()
         return {"ok": True}
 
@@ -344,17 +405,21 @@ class FleetCoordinator:
             return
         chunk.state = "pending"
         chunk.requeues += 1
-        self.n_requeues += 1
+        self.n_requeues.inc()
         self._pending.append(chunk)
+        self.pending_gauge.set(len(self._pending))
 
     def _expire_locked(self, now: float) -> None:
         """Declare silent workers dead and requeue expired leases —
         called opportunistically from every protocol entry point and
         every blocked ``label()`` wake, so no reaper thread is needed."""
+        n_live = 0
         for w in self._workers.values():
             if w.alive and now - w.last_seen > self.heartbeat_ttl_s:
                 w.alive = False
-                self.n_dead_workers += 1
+                self.n_dead_workers.inc()
+            n_live += w.alive
+        self.live_gauge.set(n_live)
         expired = [
             lid for lid, lease in self._leases.items()
             if now > lease.deadline
@@ -362,13 +427,17 @@ class FleetCoordinator:
         ]
         for lid in expired:
             lease = self._leases.pop(lid)
-            self.n_expired_leases += 1
+            self.n_expired_leases.inc()
+            if lease.span is not None:
+                lease.span.end(outcome="expired")
+                lease.span = None
             # keep the retired lease so a late result can still land
             self._retired[lid] = lease
             while len(self._retired) > 256:
                 self._retired.pop(next(iter(self._retired)))
             self._requeue_locked(lease.chunk)
         if expired:
+            self.leases_gauge.set(len(self._leases))
             self._cv.notify_all()
 
     # ------------------------------------------------------------------
@@ -399,15 +468,15 @@ class FleetCoordinator:
                 "live": sum(w.alive for w in self._workers.values()),
                 "leases_in_flight": len(self._leases),
                 "pending_chunks": len(self._pending),
-                "batches": self.n_batches,
-                "chunks": self.n_chunks,
-                "requeues": self.n_requeues,
-                "expired_leases": self.n_expired_leases,
-                "dead_workers": self.n_dead_workers,
-                "duplicate_results": self.n_duplicate_results,
-                "local_fallback_chunks": self.n_local_chunks,
-                "remote_labels": self.n_remote_labels,
-                "local_labels": self.n_local_labels,
+                "batches": int(self.n_batches.value),
+                "chunks": int(self.n_chunks.value),
+                "requeues": int(self.n_requeues.value),
+                "expired_leases": int(self.n_expired_leases.value),
+                "dead_workers": int(self.n_dead_workers.value),
+                "duplicate_results": int(self.n_duplicate_results.value),
+                "local_fallback_chunks": int(self.n_local_chunks.value),
+                "remote_labels": int(self.n_remote_labels.value),
+                "local_labels": int(self.n_local_labels.value),
                 "drifted_fingerprints": len(self._drifted),
             }
 

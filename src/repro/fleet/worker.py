@@ -29,13 +29,14 @@ from __future__ import annotations
 import argparse
 import os
 import socket
-import sys
+
 import threading
 import time
 from typing import Dict, Optional
 
 import numpy as np
 
+from .. import obs
 from .http import HttpError, request_json
 from .protocol import PROTOCOL_VERSION, build_context, encode_labels
 
@@ -76,15 +77,24 @@ class FleetWorker:
         self._verified_fps: set = set()
         self._fps_advertised: set = set()
         # counters (reported with results / heartbeats)
-        self.n_leases = 0
-        self.n_labels = 0
-        self.n_store_hits = 0
-        self.n_rejects = 0
+        reg = obs.REGISTRY
+        self.n_leases = reg.counter(
+            "repro_worker_leases_total", "leases served by this worker")
+        self.n_labels = reg.counter(
+            "repro_worker_labels_total", "genomes labeled by this worker")
+        self.n_store_hits = reg.counter(
+            "repro_worker_store_hits_total",
+            "leased genomes answered from the shared store replica")
+        self.n_rejects = reg.counter(
+            "repro_worker_rejects_total",
+            "leases rejected on fingerprint drift")
+        self._logger = obs.get_logger("repro.fleet.worker")
+        if verbose:
+            obs.setup_logging("info")
 
     # ------------------------------------------------------------------
     def _log(self, msg: str) -> None:
-        if self.verbose:
-            print(f"[fleet-worker {self.worker_id}] {msg}", file=sys.stderr)
+        self._logger.info("%s", msg)
 
     def _post(self, path: str, payload: Dict, *, retries: int = 4) -> Dict:
         return request_json(self.base + path, payload,
@@ -193,29 +203,44 @@ class FleetWorker:
             return False
         lid = lease["id"]
         genomes = np.asarray(lease["genomes"], dtype=np.int64)
-        try:
-            ctx = self._context(lease["ctx"])
-        except Exception as exc:  # noqa: BLE001 - drift/unknown name
-            self.n_rejects += 1
-            self._log(f"rejecting lease {lid}: {exc}")
-            self._post("/fleet/result", {
-                "worker": self.worker_id, "lease": lid,
-                "reject": True, "error": str(exc),
-            })
-            return True
-        t0 = time.perf_counter()
-        labels, store_hits = self._label_chunk(ctx, genomes)
-        busy = time.perf_counter() - t0
-        self.n_leases += 1
-        self.n_labels += len(genomes)
-        self.n_store_hits += store_hits
+        # adopt the lease's trace context: spans recorded here carry the
+        # campaign/batch ids minted on the orchestrator side, and ride
+        # back on the result payload for the orchestrator to ingest
+        rec = obs.recorder()
+        rec.clear()
+        with obs.attach(lease.get("trace"), worker=self.worker_id,
+                        lease=lid):
+            try:
+                ctx = self._context(lease["ctx"])
+            except Exception as exc:  # noqa: BLE001 - drift/unknown name
+                self.n_rejects.inc()
+                with obs.span("worker.reject", lease=lid):
+                    pass
+                self._log(f"rejecting lease {lid}: {exc}")
+                self._post("/fleet/result", {
+                    "worker": self.worker_id, "lease": lid,
+                    "reject": True, "error": str(exc),
+                    "spans": rec.snapshot(),
+                })
+                rec.clear()
+                return True
+            t0 = time.perf_counter()
+            with obs.span("worker.serve", n=int(len(genomes))) as sp:
+                labels, store_hits = self._label_chunk(ctx, genomes)
+                sp.set(store_hits=store_hits)
+            busy = time.perf_counter() - t0
+        self.n_leases.inc()
+        self.n_labels.inc(len(genomes))
+        self.n_store_hits.inc(store_hits)
         self._post("/fleet/result", {
             "worker": self.worker_id,
             "lease": lid,
             "labels": encode_labels(labels),
             "store_hits": store_hits,
             "busy_s": busy,
+            "spans": rec.snapshot(),
         })
+        rec.clear()
         self._log(f"lease {lid}: {len(genomes)} labels "
                   f"({store_hits} store hits) in {busy:.2f}s")
         return True
@@ -234,7 +259,8 @@ class FleetWorker:
             while not self._stop.is_set():
                 if self.step():
                     idle_since = time.monotonic()
-                    if max_leases is not None and self.n_leases >= max_leases:
+                    if (max_leases is not None
+                            and self.n_leases.value >= max_leases):
                         return
                 elif (max_idle_s is not None
                       and time.monotonic() - idle_since > max_idle_s):
@@ -289,9 +315,22 @@ def main(argv=None):
                     help="exit after serving N chunks (benchmarks/tests)")
     ap.add_argument("--max-idle-s", type=float, default=None,
                     help="exit after this long with no work")
+    ap.add_argument("--log-level", default=None,
+                    choices=["debug", "info", "warning", "error"],
+                    help="structured log level (worker/campaign ids in "
+                         "every record; default: warning, or info with "
+                         "--verbose)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="also sink this worker's spans to a local JSONL "
+                         "file (spans always ride back to the "
+                         "orchestrator on result payloads)")
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args(argv)
 
+    obs.setup_logging(args.log_level
+                      or ("info" if args.verbose else "warning"))
+    if args.trace:
+        obs.set_sink(args.trace)
     worker = FleetWorker(
         args.orchestrator,
         worker_id=args.id,

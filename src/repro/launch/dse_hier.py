@@ -16,6 +16,7 @@ import json
 
 import numpy as np
 
+from .. import obs
 from ..core.acl.library import default_library
 from ..hierarchy.search import HierarchicalConfig, run_hierarchical
 from ..service.campaigns import CampaignManager, make_accelerator
@@ -62,9 +63,18 @@ def main():
                          "(0 = ephemeral)")
     ap.add_argument("--campaign-workers", type=int, default=0,
                     help="0 = one worker per stage")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="append finished spans (campaign ticks, label "
+                         "batches, synth compiles, fleet leases) as JSON "
+                         "lines; export with 'python -m repro.obs.export "
+                         "PATH --chrome-trace'")
     ap.add_argument("--out", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    if args.trace:
+        obs.set_sink(args.trace)
+        print(f"[dse-hier] tracing to {args.trace}")
 
     pipeline = make_accelerator(args.accel)
     if not hasattr(pipeline, "stage_views"):

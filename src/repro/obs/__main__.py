@@ -1,0 +1,5 @@
+"""Alias: ``python -m repro.obs`` == ``python -m repro.obs.export``."""
+
+from .export import main
+
+raise SystemExit(main())

@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import argparse
 
+from .. import obs
 from .api import serve
 from .campaigns import CampaignManager
 from .store import JsonlLabelStore
@@ -72,11 +73,26 @@ def main(argv=None):
                     help="max label requests coalesced per batch")
     ap.add_argument("--max-wait-ms", type=float, default=20.0,
                     help="batch admission window (milliseconds)")
+    ap.add_argument("--log-level", default=None,
+                    choices=("debug", "info", "warning", "error"),
+                    help="log verbosity (default: info; every record "
+                         "carries campaign/worker correlation ids)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="append finished spans as JSON lines; export a "
+                         "Perfetto-loadable trace with 'python -m "
+                         "repro.obs.export PATH --chrome-trace'")
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args(argv)
 
+    obs.setup_logging(args.log_level
+                      or ("debug" if args.verbose else "info"))
+    log = obs.get_logger("repro.service")
+    if args.trace:
+        obs.set_sink(args.trace)
+        log.info("tracing to %s", args.trace)
+
     store = JsonlLabelStore(args.store)
-    print(f"[service] label store {args.store}: {len(store)} entries")
+    log.info("label store %s: %d entries", args.store, len(store))
     manager = CampaignManager(
         store,
         eval_workers=args.eval_workers,
@@ -95,20 +111,21 @@ def main(argv=None):
         synth_cache=args.synth_cache or None,
     )
     if manager.synth_cache is not None:
-        print(f"[service] synth cache {args.synth_cache}: "
-              f"{len(manager.synth_cache)} compiled structures")
+        log.info("synth cache %s: %d compiled structures",
+                 args.synth_cache, len(manager.synth_cache))
     if args.snapshots:
         resumable = manager.snapshot_ids()
         if resumable:
-            print(f"[service] {len(resumable)} resumable campaign(s): "
-                  + ", ".join(resumable))
+            log.info("%d resumable campaign(s): %s",
+                     len(resumable), ", ".join(resumable))
     if args.eval_backend == "fleet":
-        print("[service] fleet orchestrator mounted at POST /fleet/* — "
-              "join workers with: python -m repro.fleet.worker "
-              f"--orchestrator http://{args.host}:{args.port} "
-              f"--store {args.store}"
-              + (f" --synth-cache {args.synth_cache}"
-                 if args.synth_cache else ""))
+        log.info(
+            "fleet orchestrator mounted at POST /fleet/* — join workers "
+            "with: python -m repro.fleet.worker --orchestrator "
+            "http://%s:%s --store %s%s",
+            args.host, args.port, args.store,
+            f" --synth-cache {args.synth_cache}" if args.synth_cache else "",
+        )
     serve(manager, args.host, args.port, quiet=not args.verbose)
 
 

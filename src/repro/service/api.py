@@ -20,6 +20,10 @@ Endpoints (JSON in/out):
                                     strategy, generation, labels spent)
     GET  /campaigns/<id>/result  -> summary (val_pcc, timings, front size)
     GET  /campaigns/<id>/front   -> the campaign's true Pareto front
+    GET  /campaigns/<id>/timeline-> per-tick search telemetry (live
+                                    hypervolume vs a frozen reference,
+                                    front size, labels requested/served,
+                                    store reuse rate, stage)
     GET  /front?accel=<name>     -> merged non-dominated front over every
                                     completed campaign for that accelerator
     GET  /strategies             -> registered explorer names
@@ -34,6 +38,10 @@ Endpoints (JSON in/out):
                                     registered workers, last-heartbeat
                                     ages, leases in flight, requeues,
                                     per-worker labels/sec
+    GET  /metrics                -> Prometheus text exposition of the
+                                    same counters /stats renders as JSON
+                                    (scheduler, labeler, store, synth,
+                                    fleet, worker instruments)
     GET  /healthz                -> {"ok": true}
 
 With ``--eval-backend fleet`` the embedded orchestrator's worker
@@ -56,9 +64,12 @@ import urllib.parse
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Dict, Optional, Tuple
 
+from .. import obs
 from .campaigns import CampaignManager, CampaignSpec, HierarchicalSpec
 
 __all__ = ["make_server", "serve", "Client"]
+
+_log = obs.get_logger("repro.service")
 
 
 def _campaign_summary(mgr: CampaignManager, cid: str) -> Dict:
@@ -106,6 +117,15 @@ class _Handler(BaseHTTPRequestHandler):
         try:
             if path == "/healthz":
                 return self._send({"ok": True})
+            if path == "/metrics":
+                body = obs.render_prometheus().encode()
+                self.send_response(200)
+                self.send_header("Content-Type",
+                                 "text/plain; version=0.0.4")
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+                return None
             if path == "/strategies":
                 from ..core.strategies import available_strategies
 
@@ -128,13 +148,16 @@ class _Handler(BaseHTTPRequestHandler):
                     params["objectives"].split(",")
                 ) if params.get("objectives") else ("qor", "energy")
                 return self._send(mgr.global_front(accel, objectives))
-            m = re.fullmatch(r"/campaigns/([\w-]+)(/result|/front)?", path)
+            m = re.fullmatch(r"/campaigns/([\w-]+)"
+                             r"(/result|/front|/timeline)?", path)
             if m:
                 cid, sub = m.group(1), m.group(2)
                 if sub == "/front":
                     return self._send(mgr.front(cid))
                 if sub == "/result":
                     return self._send(_campaign_summary(mgr, cid))
+                if sub == "/timeline":
+                    return self._send(mgr.campaign_timeline(cid))
                 return self._send(mgr.status(cid))
             return self._error(404, f"no route {path}")
         except KeyError:
@@ -212,12 +235,14 @@ def make_server(
 
 
 def serve(manager, host="127.0.0.1", port=8177, *, quiet=False) -> None:
+    if not obs.get_logger().handlers:  # CLI sets its own level first
+        obs.setup_logging("info")
     srv = make_server(manager, host, port, quiet=quiet)
-    print(f"[service] listening on http://{host}:{srv.server_address[1]}")
+    _log.info("listening on http://%s:%s", host, srv.server_address[1])
     try:
         srv.serve_forever()
     except KeyboardInterrupt:
-        print("\n[service] shutting down")
+        _log.info("shutting down")
     finally:
         srv.server_close()
         manager.shutdown()
@@ -268,6 +293,17 @@ class Client:
 
     def front(self, cid: str) -> Dict:
         return self._req(f"/campaigns/{cid}/front")
+
+    def timeline(self, cid: str) -> Dict:
+        return self._req(f"/campaigns/{cid}/timeline")
+
+    def metrics(self) -> str:
+        """Raw Prometheus text from GET /metrics."""
+        import urllib.request
+
+        with urllib.request.urlopen(self.base + "/metrics",
+                                    timeout=self.timeout) as resp:
+            return resp.read().decode()
 
     def global_front(self, accel: str,
                      objectives: Optional[Tuple[str, ...]] = None) -> Dict:

@@ -39,12 +39,15 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from .. import obs
 from ..core.dse import DSEConfig, DSEResult
 from ..core.nsga2 import NSGA2Config
 from ..core.pareto import non_dominated_mask
 from ..core.surrogates import make
 from .scheduler import EvalScheduler
 from .store import LABEL_KEYS, EvalContext, InMemoryLabelStore, LabelStore
+
+_log = obs.get_logger("repro.service.campaigns")
 
 __all__ = [
     "CampaignSpec",
@@ -502,6 +505,9 @@ class CampaignManager:
             synth_cache_path=getattr(self.synth_cache, "path", None),
         )
         self.registry = SurrogateRegistry()
+        # per-campaign search telemetry, sampled at tick boundaries and
+        # served by GET /campaigns/<id>/timeline
+        self.timeline = obs.Timeline()
         # campaign workers STEP campaigns cooperatively: one executor
         # task is one tick (a label request, one strategy round, or one
         # label delivery), so N campaigns multiplex over few threads and
@@ -553,6 +559,8 @@ class CampaignManager:
 
     def submit(self, spec: CampaignSpec) -> str:
         c = self._admit(spec, "dse")
+        _log.info("campaign %s submitted: accel=%s strategy=%s",
+                  c.id, spec.accel, spec.strategy)
         self._enqueue(c)
         return c.id
 
@@ -595,44 +603,94 @@ class CampaignManager:
     def _step(self, c: _Campaign) -> None:
         """One cooperative tick.  Re-enqueues itself while runnable;
         parks (holding NO thread) while labels are in flight — the
-        gather callback re-enqueues on delivery."""
+        gather callback re-enqueues on delivery.
+
+        The tick runs under the campaign's trace context (trace id ==
+        campaign id), so every span it causes — strategy rounds, label
+        batches, synth compiles, fleet leases — correlates back to the
+        campaign in the exported trace."""
         try:
-            if c.state == "queued":
-                c.state = "running"
-                if c.started_at is None:
-                    c.started_at = time.time()
-            if c.cancel_requested:
-                self._save_snapshot(c)
-                c.state = "cancelled"
-                c.finished_at = time.time()
-                c.done_evt.set()
-                return
-            if c.driver is None:
-                self._build_driver(c)
-            if c.inbox is not None:
-                req, labels = c.inbox
-                c.inbox = None
-                c.driver.deliver(req, labels)
-                self._save_snapshot(c)
-            elif not c.driver.done:
-                req = c.driver.step()
-                if req is not None:
-                    self._dispatch_labels(c, req)
-                    return
-                c.steps += 1
-                if c.steps % self.snapshot_every == 0:
-                    self._save_snapshot(c)
-            if c.driver.done:
-                c.result = c.driver.result()
-                c.state = "done"
-                self._drop_snapshot(c.id)
-                c.finished_at = time.time()
-                c.done_evt.set()
-                self._evict()
-            else:
-                self._enqueue(c)
+            with obs.context(campaign=c.id, trace_id=c.id), \
+                    obs.span("campaign.tick", step=c.steps,
+                             kind=c.kind) as sp:
+                self._tick(c, sp)
         except Exception as exc:  # noqa: BLE001 - campaign isolation
             self._fail(c, exc)
+
+    def _tick(self, c: _Campaign, sp) -> None:
+        _log.debug("tick %d state=%s", c.steps, c.state)
+        if c.state == "queued":
+            c.state = "running"
+            if c.started_at is None:
+                c.started_at = time.time()
+        if c.cancel_requested:
+            self._save_snapshot(c)
+            c.state = "cancelled"
+            c.finished_at = time.time()
+            sp.set(action="cancel")
+            _log.info("campaign %s cancelled at tick %d", c.id, c.steps)
+            c.done_evt.set()
+            return
+        if c.driver is None:
+            self._build_driver(c)
+        if c.inbox is not None:
+            req, labels = c.inbox
+            c.inbox = None
+            sp.set(action="deliver", stage=req.stage)
+            c.driver.deliver(req, labels)
+            self._save_snapshot(c)
+        elif not c.driver.done:
+            req = c.driver.step()
+            if req is not None:
+                sp.set(action="request", stage=req.stage,
+                       n=int(len(req.genomes)))
+                self._sample_timeline(c)
+                self._dispatch_labels(c, req)
+                return
+            sp.set(action="round")
+            c.steps += 1
+            if c.steps % self.snapshot_every == 0:
+                self._save_snapshot(c)
+        self._sample_timeline(c)
+        if c.driver.done:
+            c.result = c.driver.result()
+            c.state = "done"
+            self._drop_snapshot(c.id)
+            c.finished_at = time.time()
+            sp.set(done=True)
+            _log.info("campaign %s done: %d ticks in %.1fs", c.id,
+                      c.steps, c.finished_at - (c.started_at or c.finished_at))
+            c.done_evt.set()
+            self._evict()
+        else:
+            self._enqueue(c)
+
+    def _sample_timeline(self, c: _Campaign) -> None:
+        """One search-telemetry sample at a tick boundary.  Best-effort
+        by design: telemetry must never fail a campaign."""
+        d = c.driver
+        if d is None:
+            return
+        try:
+            fields: Dict = {}
+            prog = d.progress()
+            fields["stage"] = prog.get("stage")
+            fields["labels_requested"] = prog.get("labels_requested", 0)
+            if "generation" in prog:
+                fields["generation"] = prog["generation"]
+            sched = self.scheduler.campaign_stats(c.id)
+            if sched:
+                fields["labels_served"] = sched.get("labeled", 0)
+                fields["store_hits"] = sched.get("store_hits", 0)
+                req = sched.get("requests", 0)
+                hits = (sched.get("store_hits", 0)
+                        + sched.get("inflight_hits", 0))
+                fields["label_reuse_rate"] = (hits / req) if req else 0.0
+            front = (d.front_estimate()
+                     if hasattr(d, "front_estimate") else None)
+            self.timeline.sample(c.id, objectives=front, **fields)
+        except Exception:  # noqa: BLE001 - telemetry is best-effort
+            pass
 
     def _dispatch_labels(self, c: _Campaign, req) -> None:
         """Fan the request out through the scheduler and park the
@@ -663,6 +721,7 @@ class CampaignManager:
     def _fail(self, c: _Campaign, exc: BaseException) -> None:
         c.state = "failed"
         c.error = f"{type(exc).__name__}: {exc}"
+        _log.warning("campaign %s failed: %s", c.id, c.error)
         c.finished_at = time.time()
         c.done_evt.set()
         self._evict()
@@ -807,10 +866,15 @@ class CampaignManager:
 
             spec = c.spec
             pipeline = make_accelerator(spec.accel)
-            c.result = run_hierarchical(
-                pipeline, cfg=spec.hier_config(), manager=self,
-                stage_overrides=spec.stages or None,
-            )
+            # the job span covers the whole hierarchical run; its stage
+            # campaigns tick under their OWN trace ids (one trace per
+            # campaign), linked back here by the parent attribute
+            with obs.context(campaign=c.id, trace_id=c.id), \
+                    obs.span("campaign.hier", accel=spec.accel):
+                c.result = run_hierarchical(
+                    pipeline, cfg=spec.hier_config(), manager=self,
+                    stage_overrides=spec.stages or None,
+                )
             c.state = "done"
         except Exception as exc:  # noqa: BLE001 - campaign isolation
             c.state = "failed"
@@ -842,6 +906,7 @@ class CampaignManager:
                     c.result = _CompactResult(c.result)
         for cid in dropped:
             self.scheduler.forget_campaign(cid)
+            self.timeline.forget(cid)
 
     # ------------------------------------------------------------------
     def _get(self, cid: str) -> _Campaign:
@@ -893,6 +958,22 @@ class CampaignManager:
                 out["flat_space_size"] = float(c.result.flat_space_size)
                 out["max_concurrent_stages"] = int(
                     c.result.max_concurrent_stages)
+        return out
+
+    def campaign_timeline(self, cid: str) -> Dict:
+        """Per-tick search telemetry series for one campaign (backs
+        ``GET /campaigns/<id>/timeline``): hypervolume against the
+        frozen per-campaign reference, front size, labels requested/
+        served, store reuse rate, stage progress."""
+        c = self._get(cid)
+        out = {
+            "id": cid,
+            "state": c.state,
+            "samples": self.timeline.series(cid),
+        }
+        ref = self.timeline.reference(cid)
+        if ref is not None:
+            out["hv_reference"] = ref
         return out
 
     def list_campaigns(self) -> List[Dict]:
@@ -988,6 +1069,11 @@ class CampaignManager:
                 "fast_codegen": synth_mod.FAST_CODEGEN,
                 "persistent": hasattr(cache, "path"),
                 "cache": cache.stats(),
+            },
+            "obs": {
+                "tracing": obs.enabled(),
+                "recorder": obs.recorder().stats(),
+                "timeline_campaigns": len(self.timeline.campaigns()),
             },
         }
 

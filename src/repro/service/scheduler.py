@@ -41,6 +41,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from .. import obs
 from .store import LABEL_KEYS, EvalContext, LabelStore
 
 __all__ = ["EvalScheduler", "gather_futures"]
@@ -85,6 +86,9 @@ class _Entry:
     origin: Optional[str] = None  # campaign that pays the ground truth
     future: Future = field(default_factory=Future)
     campaigns: set = field(default_factory=set)
+    # trace context captured at submit() so the batch span (run on a
+    # pool thread) links back to the submitting campaign's trace
+    wire: Optional[dict] = None
 
 
 class EvalScheduler:
@@ -122,6 +126,8 @@ class EvalScheduler:
                 f"got {fleet_fallback!r}"
             )
         self.store = store
+        if hasattr(store, "register_metrics"):
+            store.register_metrics()
         self.backend = backend
         self.max_batch = int(max_batch)
         self.max_wait_s = float(max_wait_s)
@@ -143,24 +149,52 @@ class EvalScheduler:
                 chunk_size=chunk_size,
                 synth_cache_path=synth_cache_path,
             )
-        self.n_process_batches = 0
-        self.n_process_fallbacks = 0
-        self.n_fleet_batches = 0
-        self.n_fleet_fallbacks = 0
         self._pool = ThreadPoolExecutor(n_workers, thread_name_prefix="eval")
         self._cv = threading.Condition()
         self._pending: deque = deque()          # _Entry awaiting dispatch
         self._inflight: Dict[str, _Entry] = {}  # key -> entry (pending or running)
         self._stopped = False
-        # accounting — running counters only: the service is long-lived,
-        # so per-batch history would grow (and stats() rescans) unbounded
-        self.n_requests = 0
-        self.n_store_hits = 0
-        self.n_inflight_hits = 0
-        self.n_labeled = 0
-        self.n_batches = 0
-        self.n_coalesced_batches = 0
-        self.sum_batch_sizes = 0
+        # accounting — registry instruments, not plain ints: per-thread
+        # sharded counters are incrementable outside _cv (worker threads
+        # never contend with stats() scrapes) and double as the
+        # GET /metrics substrate.  Running counters only: the service is
+        # long-lived, so per-batch history would grow unbounded.
+        reg = obs.REGISTRY
+        self.n_requests = reg.counter(
+            "repro_sched_requests_total", "label requests submitted")
+        self.n_store_hits = reg.counter(
+            "repro_sched_store_hits_total", "requests answered by the store")
+        self.n_inflight_hits = reg.counter(
+            "repro_sched_inflight_hits_total",
+            "requests deduped onto an in-flight genome")
+        self.n_labeled = reg.counter(
+            "repro_sched_labeled_total", "genomes ground-truth labeled")
+        self.n_batches = reg.counter(
+            "repro_sched_batches_total", "label batches dispatched")
+        self.n_coalesced_batches = reg.counter(
+            "repro_sched_coalesced_batches_total",
+            "batches serving more than one campaign")
+        self.n_process_batches = reg.counter(
+            "repro_sched_process_batches_total",
+            "batches labeled on the process pool")
+        self.n_process_fallbacks = reg.counter(
+            "repro_sched_process_fallbacks_total",
+            "batches that fell back from the process pool")
+        self.n_fleet_batches = reg.counter(
+            "repro_sched_fleet_batches_total", "batches leased to the fleet")
+        self.n_fleet_fallbacks = reg.counter(
+            "repro_sched_fleet_fallbacks_total",
+            "batches that fell back from the fleet")
+        self.batch_size = reg.histogram(
+            "repro_sched_batch_size", "genomes per dispatched batch",
+            buckets=(1, 2, 4, 8, 16, 32, 64, 128, 256))
+        self.batch_seconds = reg.histogram(
+            "repro_sched_batch_seconds",
+            "ground truth + store write latency per batch")
+        self.queue_depth = reg.gauge(
+            "repro_sched_pending", "entries awaiting dispatch")
+        self.inflight_gauge = reg.gauge(
+            "repro_sched_inflight", "unique genomes pending or running")
         self.per_campaign: Dict[str, Dict[str, int]] = {}
         self._batcher = threading.Thread(
             target=self._batch_loop, name="eval-batcher", daemon=True
@@ -188,19 +222,20 @@ class EvalScheduler:
         genomes = np.atleast_2d(np.asarray(genomes, dtype=np.int64))
         futures: List[Future] = []
         to_enqueue: List[_Entry] = []
+        wire = obs.wire_context()
         with self._cv:
             if self._stopped:
                 raise RuntimeError("scheduler is shut down")
             cstats = self._campaign_stats(campaign)
             for g in genomes:
-                self.n_requests += 1
+                self.n_requests.inc()
                 cstats["requests"] += 1
                 key = ctx.key(g)
                 ent = self._inflight.get(key)
                 if ent is not None:
                     # identical genome already queued/being labeled:
                     # share its future (in-flight dedup)
-                    self.n_inflight_hits += 1
+                    self.n_inflight_hits.inc()
                     cstats["inflight_hits"] += 1
                     if campaign is not None:
                         ent.campaigns.add(campaign)
@@ -208,20 +243,22 @@ class EvalScheduler:
                     continue
                 rec = self.store.get(key)
                 if rec is not None:
-                    self.n_store_hits += 1
+                    self.n_store_hits.inc()
                     cstats["store_hits"] += 1
                     f: Future = Future()
                     f.set_result(rec)
                     futures.append(f)
                     continue
                 ent = _Entry(key=key, genome=np.array(g), ctx=ctx,
-                             origin=campaign)
+                             origin=campaign, wire=wire)
                 if campaign is not None:
                     ent.campaigns.add(campaign)
                 self._inflight[key] = ent
                 to_enqueue.append(ent)
                 futures.append(ent.future)
             self._pending.extend(to_enqueue)
+            self.queue_depth.set(len(self._pending))
+            self.inflight_gauge.set(len(self._inflight))
             if to_enqueue:
                 self._cv.notify_all()
         return futures
@@ -280,6 +317,7 @@ class EvalScheduler:
                     else:
                         keep.append(ent)
                 self._pending = keep
+                self.queue_depth.set(len(self._pending))
             # a misbehaving caller context must fail its waiters, never
             # kill the batcher thread
             for ent, exc in bad:
@@ -297,63 +335,77 @@ class EvalScheduler:
                 for e in batch:
                     e.future.set_exception(exc)
 
-    def _ground_truth(self, ctx: EvalContext, genomes: np.ndarray):
+    def _ground_truth(self, ctx: EvalContext, genomes: np.ndarray,
+                      sp=None):
         """One batched ground-truth call, on the configured backend."""
         if self.fleet is not None:
             # empty fleet / unportable context degrades to the fallback
             # backend below (counted, so /stats shows the degradation)
             if self.fleet.eligible(ctx):
-                with self._cv:
-                    self.n_fleet_batches += 1
+                self.n_fleet_batches.inc()
+                if sp is not None:
+                    sp.set(backend="fleet")
                 return self.fleet.label(ctx, genomes)
-            with self._cv:
-                self.n_fleet_fallbacks += 1
+            self.n_fleet_fallbacks.inc()
         if self._proc is not None:
             if self._proc.can_label(ctx):
-                with self._cv:
-                    self.n_process_batches += 1
+                self.n_process_batches.inc()
+                if sp is not None:
+                    sp.set(backend="process")
                 return self._proc.label(ctx, genomes)
-            with self._cv:
-                self.n_process_fallbacks += 1
+            self.n_process_fallbacks.inc()
+        if sp is not None:
+            sp.set(backend="thread")
         return ctx.ground_truth(genomes)
 
     def _run_batch(self, batch: List[_Entry]) -> None:
         ctx = batch[0].ctx
-        try:
-            genomes = np.stack([e.genome for e in batch])
-            labels = self._ground_truth(ctx, genomes)
-            recs = [
-                {k: float(labels[k][i]) for k in LABEL_KEYS}
-                for i in range(len(batch))
-            ]
-            # one lock acquisition + one buffered write for the batch
-            self.store.put_many(
-                (e.key, rec) for e, rec in zip(batch, recs)
-            )
-        except Exception as exc:
-            # label OR store failure: fail every waiter instead of
-            # leaving dead inflight entries that hang future dedup hits
+        head = batch[0]
+        t0 = time.perf_counter()
+        with obs.attach(head.wire), \
+                obs.span("sched.batch", n=len(batch),
+                         origin=head.origin) as sp:
+            try:
+                genomes = np.stack([e.genome for e in batch])
+                labels = self._ground_truth(ctx, genomes, sp)
+                recs = [
+                    {k: float(labels[k][i]) for k in LABEL_KEYS}
+                    for i in range(len(batch))
+                ]
+                # one lock acquisition + one buffered write for the batch
+                self.store.put_many(
+                    (e.key, rec) for e, rec in zip(batch, recs)
+                )
+            except Exception as exc:
+                # label OR store failure: fail every waiter instead of
+                # leaving dead inflight entries that hang future dedup hits
+                sp.set(outcome="error", error=type(exc).__name__)
+                with self._cv:
+                    for e in batch:
+                        self._inflight.pop(e.key, None)
+                    self.inflight_gauge.set(len(self._inflight))
+                for e in batch:
+                    e.future.set_exception(exc)
+                return
             with self._cv:
+                # e.campaigns is mutated by submit() under this lock, so
+                # the union must happen here too
+                campaigns = set()
+                for e in batch:
+                    campaigns |= e.campaigns
+                    # the originating request pays ground truth — accounted
+                    # on success so failed batches don't overstate work
+                    self._campaign_stats(e.origin)["labeled"] += 1
                 for e in batch:
                     self._inflight.pop(e.key, None)
-            for e in batch:
-                e.future.set_exception(exc)
-            return
-        with self._cv:
-            # e.campaigns is mutated by submit() under this lock, so the
-            # union must happen here too
-            campaigns = set()
-            for e in batch:
-                campaigns |= e.campaigns
-                # the originating request pays ground truth — accounted
-                # on success so failed batches don't overstate work
-                self._campaign_stats(e.origin)["labeled"] += 1
-            self.n_labeled += len(batch)
-            self.n_batches += 1
-            self.n_coalesced_batches += len(campaigns) > 1
-            self.sum_batch_sizes += len(batch)
-            for e in batch:
-                self._inflight.pop(e.key, None)
+                self.inflight_gauge.set(len(self._inflight))
+            self.n_labeled.inc(len(batch))
+            self.n_batches.inc()
+            if len(campaigns) > 1:
+                self.n_coalesced_batches.inc()
+            self.batch_size.observe(len(batch))
+            self.batch_seconds.observe(time.perf_counter() - t0)
+            sp.set(outcome="ok", campaigns=len(campaigns))
         for rec, e in zip(recs, batch):
             e.future.set_result(rec)
 
@@ -364,32 +416,38 @@ class EvalScheduler:
         # slow pool can't stall submitters
         labeler = self._proc.stats() if self._proc is not None else None
         fleet = self.fleet.stats() if self.fleet is not None else None
+        # counter reads are registry-instrument scrapes — no _cv needed,
+        # so a long-running batch can never stall a stats() poller; only
+        # the per-campaign dict still wants the lock
+        requests = int(self.n_requests.value)
+        store_hits = int(self.n_store_hits.value)
+        inflight_hits = int(self.n_inflight_hits.value)
+        n_batches = int(self.n_batches.value)
         with self._cv:
-            return {
-                "backend": self.backend,
-                "labeler": labeler,
-                "fleet": fleet,
-                "fleet_batches": self.n_fleet_batches,
-                "fleet_fallbacks": self.n_fleet_fallbacks,
-                "process_batches": self.n_process_batches,
-                "process_fallbacks": self.n_process_fallbacks,
-                "requests": self.n_requests,
-                "store_hits": self.n_store_hits,
-                "inflight_dedup_hits": self.n_inflight_hits,
-                "labeled": self.n_labeled,
-                "batches": self.n_batches,
-                "coalesced_batches": self.n_coalesced_batches,
-                "mean_batch_size": (
-                    self.sum_batch_sizes / self.n_batches
-                ) if self.n_batches else 0.0,
-                "label_hit_rate": (
-                    (self.n_store_hits + self.n_inflight_hits)
-                    / self.n_requests
-                ) if self.n_requests else 0.0,
-                "per_campaign": {k: dict(v)
-                                 for k, v in self.per_campaign.items()},
-                "store": self.store.stats(),
-            }
+            per_campaign = {k: dict(v) for k, v in self.per_campaign.items()}
+        return {
+            "backend": self.backend,
+            "labeler": labeler,
+            "fleet": fleet,
+            "fleet_batches": int(self.n_fleet_batches.value),
+            "fleet_fallbacks": int(self.n_fleet_fallbacks.value),
+            "process_batches": int(self.n_process_batches.value),
+            "process_fallbacks": int(self.n_process_fallbacks.value),
+            "requests": requests,
+            "store_hits": store_hits,
+            "inflight_dedup_hits": inflight_hits,
+            "labeled": int(self.n_labeled.value),
+            "batches": n_batches,
+            "coalesced_batches": int(self.n_coalesced_batches.value),
+            "mean_batch_size": (
+                self.batch_size.sum / n_batches
+            ) if n_batches else 0.0,
+            "label_hit_rate": (
+                (store_hits + inflight_hits) / requests
+            ) if requests else 0.0,
+            "per_campaign": per_campaign,
+            "store": self.store.stats(),
+        }
 
     def campaign_stats(self, campaign: str) -> Optional[Dict[str, int]]:
         """One campaign's labeling counters — O(1), unlike stats()."""

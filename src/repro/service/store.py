@@ -40,6 +40,7 @@ except ImportError:  # pragma: no cover - non-POSIX
 
 import numpy as np
 
+from .. import obs
 from ..core.acl.library import Library
 from ..core.features import synth
 
@@ -189,17 +190,33 @@ class LabelStore:
 
     def __init__(self):
         self._lock = threading.Lock()
-        self.hits = 0
-        self.misses = 0
+        # standalone sharded instruments (race-free increments from any
+        # worker thread); register_metrics() publishes THIS instance's
+        # instruments to the scrape registry — the scheduler does that
+        # for the store it owns, so GET /metrics shows the service
+        # store, not whichever ephemeral store was built last
+        self.hits = obs.Counter(
+            "repro_store_hits_total", "label store lookups served")
+        self.misses = obs.Counter(
+            "repro_store_misses_total", "label store lookups missed")
+
+    def register_metrics(self, registry=None) -> None:
+        reg = registry or obs.REGISTRY
+        for inst in (self.hits, self.misses):
+            reg._register(inst)
+        self._entries_gauge = reg.gauge(
+            "repro_store_entries", "unique labels in the store")
+        with self._lock:
+            self._entries_gauge.set(self._len())
 
     def get(self, key: str) -> Optional[Dict[str, float]]:
         with self._lock:
             rec = self._get(key)
-            if rec is None:
-                self.misses += 1
-            else:
-                self.hits += 1
-            return rec
+        if rec is None:
+            self.misses.inc()
+        else:
+            self.hits.inc()
+        return rec
 
     def put(self, key: str, labels: Dict[str, float]) -> None:
         rec = {k: float(labels[k]) for k in LABEL_KEYS}
@@ -219,21 +236,26 @@ class LabelStore:
             return
         with self._lock:
             self._put_batch(recs)
+            g = getattr(self, "_entries_gauge", None)
+            if g is not None:
+                g.set(self._len())
 
     def __len__(self) -> int:
         with self._lock:
             return self._len()
 
     def stats(self) -> Dict[str, float]:
+        hits = int(self.hits.value)
+        misses = int(self.misses.value)
+        total = hits + misses
         with self._lock:
             n = self._len()
-            total = self.hits + self.misses
-            return {
-                "entries": n,
-                "hits": self.hits,
-                "misses": self.misses,
-                "hit_rate": (self.hits / total) if total else 0.0,
-            }
+        return {
+            "entries": n,
+            "hits": hits,
+            "misses": misses,
+            "hit_rate": (hits / total) if total else 0.0,
+        }
 
     # implementations override (called under the lock):
     def _get(self, key: str) -> Optional[Dict[str, float]]:
@@ -376,7 +398,7 @@ class JsonlLabelStore(LabelStore):
         # folded into the compacted file) or block until the rename is
         # visible (and their next append detects the new inode) — no
         # torn tail, no dropped foreign records
-        with self._write_lock():
+        with obs.span("store.compact", path=self.path), self._write_lock():
             self._replay()
             dropped = max(self._n_lines - len(self._data), 0)
             if self._fh is not None:
@@ -428,7 +450,7 @@ class JsonlLabelStore(LabelStore):
         # inode swap, reopening the handle) BEFORE we append, so
         # advancing the offset below cannot skip another process's
         # records and our records cannot land in a dropped inode
-        with self._write_lock():
+        with obs.span("store.put", n=len(fresh)), self._write_lock():
             self._replay()
             if self._fh is None:
                 self._fh = open(self.path, "a")

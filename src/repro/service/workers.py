@@ -29,11 +29,13 @@ import math
 import multiprocessing as mp
 import os
 import threading
+import time
 from concurrent.futures import ProcessPoolExecutor
 from typing import Dict, Optional
 
 import numpy as np
 
+from .. import obs
 from .store import LABEL_KEYS, EvalContext
 
 __all__ = ["ProcessPoolLabeler", "WORKER_XLA_FLAGS", "warm_library"]
@@ -94,6 +96,7 @@ def _worker_label(
     qor_seed: int,
     expected_fp: str,
     genomes: np.ndarray,
+    wire: Optional[Dict] = None,
 ) -> Dict[str, np.ndarray]:
     """Label one genome chunk inside a worker process."""
     if "library" not in _WORKER_STATE:  # fork-start or initializer skipped
@@ -123,12 +126,23 @@ def _worker_label(
     if hasattr(scache, "refresh"):
         # pick up compiles that sibling workers / the parent appended
         scache.refresh()
-    labels = ctx.ground_truth(np.asarray(genomes, dtype=np.int64))
+    # adopt the parent's trace context so this chunk's spans (and the
+    # synth.compile spans under it) link to the submitting campaign;
+    # the worker handles one chunk at a time, so the ring holds exactly
+    # this chunk's spans between clear() and snapshot()
+    rec = obs.recorder()
+    rec.clear()
+    with obs.attach(wire, worker=f"pool-{os.getpid()}"):
+        with obs.span("labeler.chunk", n=int(len(genomes)),
+                      accel=accel_name):
+            labels = ctx.ground_truth(np.asarray(genomes, dtype=np.int64))
     out = {k: np.asarray(labels[k]) for k in LABEL_KEYS}
-    # piggyback this worker's cumulative synth counters on the result so
-    # the parent's ProcessPoolLabeler.stats() can aggregate them without
-    # an extra round trip
+    # piggyback this worker's cumulative synth counters AND the chunk's
+    # finished spans on the result so the parent can aggregate/ingest
+    # them without an extra round trip
     out["_synth_stats"] = {"pid": os.getpid(), **scache.stats()}
+    out["_spans"] = rec.snapshot()
+    rec.clear()
     return out
 
 
@@ -161,8 +175,14 @@ class ProcessPoolLabeler:
         self._lock = threading.Lock()
         self._safe_fps: Dict[str, bool] = {}   # ctx fingerprint -> verdict
         self._worker_synth: Dict[int, Dict] = {}  # pid -> latest counters
-        self.n_chunks = 0
-        self.n_labeled = 0
+        self.n_chunks = obs.REGISTRY.counter(
+            "repro_labeler_chunks_total", "chunks sent to worker processes")
+        self.n_labeled = obs.REGISTRY.counter(
+            "repro_labeler_labeled_total",
+            "genomes labeled by the process pool")
+        self.batch_seconds = obs.REGISTRY.histogram(
+            "repro_labeler_batch_seconds",
+            "wall seconds per process-pool batch fan-out")
 
     # ------------------------------------------------------------------
     def can_label(self, ctx: EvalContext) -> bool:
@@ -197,22 +217,30 @@ class ProcessPoolLabeler:
             c for c in np.array_split(genomes, self._chunks(len(genomes)))
             if len(c)
         ]
-        futures = [
-            self._pool.submit(
-                _worker_label,
-                ctx.accel.name, ctx.rank_genes, ctx.n_qor_samples,
-                ctx.qor_seed, ctx.fingerprint, chunk,
-            )
-            for chunk in parts
-        ]
-        results = [f.result() for f in futures]
+        t0 = time.perf_counter()
+        with obs.span("labeler.batch", n=int(len(genomes)),
+                      chunks=len(parts)):
+            wire = obs.wire_context()
+            futures = [
+                self._pool.submit(
+                    _worker_label,
+                    ctx.accel.name, ctx.rank_genes, ctx.n_qor_samples,
+                    ctx.qor_seed, ctx.fingerprint, chunk, wire,
+                )
+                for chunk in parts
+            ]
+            results = [f.result() for f in futures]
+        self.batch_seconds.observe(time.perf_counter() - t0)
+        self.n_chunks.inc(len(parts))
+        self.n_labeled.inc(len(genomes))
+        rec = obs.recorder()
         with self._lock:
-            self.n_chunks += len(parts)
-            self.n_labeled += len(genomes)
             for r in results:
                 ws = r.get("_synth_stats")
                 if ws:   # counters are cumulative: latest-per-pid wins
                     self._worker_synth[ws["pid"]] = ws
+        for r in results:
+            rec.ingest(r.get("_spans") or ())
         return {
             k: np.concatenate([r[k] for r in results]) for k in LABEL_KEYS
         }
@@ -236,14 +264,13 @@ class ProcessPoolLabeler:
         total = served + synth_agg["compiles"]
         synth_agg["hit_rate"] = (served / total) if total else 0.0
         synth_agg["workers_reporting"] = len(per_worker)
-        with self._lock:
-            return {
-                "workers": self.n_workers,
-                "chunks": self.n_chunks,
-                "labeled": self.n_labeled,
-                "synth_cache_path": self.synth_cache_path,
-                "synth": synth_agg,
-            }
+        return {
+            "workers": self.n_workers,
+            "chunks": int(self.n_chunks.value),
+            "labeled": int(self.n_labeled.value),
+            "synth_cache_path": self.synth_cache_path,
+            "synth": synth_agg,
+        }
 
     def shutdown(self, *, wait: bool = True) -> None:
         self._pool.shutdown(wait=wait)
