@@ -37,6 +37,15 @@ disabled (sink off, interleaved + order-alternated rounds).  Target:
 tracing costs <3% labels/sec — a warning, not an assert, because shared
 hosts drift more than that between runs.
 
+``--fused`` measures the steady-state labeling regime instead — warm
+synthesis caches across generations, where behavioral simulation
+dominates the label — comparing the numpy batched engine (fused kill
+switch thrown), the fused XLA engine, and the warm process pool on the
+same per-round populations.  Labels and fronts must be byte-identical
+across all three, and the fused engine must add ZERO XLA recompiles
+across the timed generations (population bucketing).  Results merge
+into BENCH_labeler.json under the ``fused`` key.
+
 ``--fleet`` benchmarks the multi-host labeling fleet instead and writes
 ``BENCH_fleet.json``: labels/sec of one vs two local fleet workers on
 gaussian3x3 (measured, plus a CPU-seconds projection onto a machine
@@ -45,6 +54,7 @@ killed while holding a lease mid-batch and the batch must still
 complete with labels byte-identical to the in-process engine.
 
 Run:  PYTHONPATH=src python benchmarks/labeler_throughput.py [--smoke]
+      PYTHONPATH=src python benchmarks/labeler_throughput.py --fused [--smoke]
       PYTHONPATH=src python benchmarks/labeler_throughput.py --fleet [--smoke]
       PYTHONPATH=src python benchmarks/labeler_throughput.py --obs [--smoke]
 """
@@ -376,6 +386,179 @@ def run_fleet_bench(args):
     print(f"wrote {out_path}", file=sys.stderr)
 
 
+def run_fused_bench(args):
+    """Steady-state (warm-synth-cache) engine comparison -> the
+    ``fused`` section of BENCH_labeler.json.
+
+    A long-lived campaign's label stream runs with warm per-circuit
+    tables and a warm structural synthesis cache — the regime where the
+    numpy behavioral sim is the dominant cost.  Each round draws fresh
+    genomes, pre-pays their synthesis once (untimed warm pass, so every
+    arm sees the same cached-synthesis work), then times three engines
+    in alternating order:
+
+      * ``numpy_batched_thread`` — the batched numpy engine, fused
+        dispatch disabled via the REPRO_SIM_FUSED=0 kill switch
+      * ``fused_thread``         — the fused XLA engine in-process
+      * ``batched_process``      — the warm spawn pool (production
+        default; its workers fuse too, the delta is IPC + chunking)
+
+    Asserted: labels and Pareto fronts byte-identical across all three
+    engines every round, and zero fused-engine recompiles across the
+    timed generations (population bucketing holds)."""
+    from repro.accel import fused
+    from repro.core.acl.library import default_library
+    from repro.service.workers import ProcessPoolLabeler, warm_library
+
+    G = args.n or (4 if args.smoke else 16)
+    rounds = args.rounds or (1 if args.smoke else 5)
+    n_qor = 2 if args.smoke else 4
+    library = default_library()
+    warm_library(library)
+    fused.warm(library)
+
+    section(f"warming process pool ({WORKERS} spawn workers)")
+    pool = ProcessPoolLabeler(WORKERS)
+    for name in ("gaussian3x3", "smoothed_dct"):
+        wctx = _fresh_ctx(name, n_qor)
+        pool.label(wctx, _population(wctx.accel, library, G, seed=777))
+    worker_pids = list(getattr(pool._pool, "_processes", {}) or [])
+
+    backends = ("numpy_batched_thread", "fused_thread", "batched_process")
+    fused_report = {
+        "population": G, "rounds": rounds, "n_qor_samples": n_qor,
+        "workers": WORKERS, "smoke": bool(args.smoke),
+        "workloads": {},
+    }
+
+    def run_numpy(ctx, genomes):
+        os.environ["REPRO_SIM_FUSED"] = "0"
+        try:
+            t0 = time.perf_counter()
+            labels = ctx.ground_truth(genomes)
+            return labels, time.perf_counter() - t0
+        finally:
+            del os.environ["REPRO_SIM_FUSED"]
+
+    def run_fused(ctx, genomes):
+        t0 = time.perf_counter()
+        labels = ctx.ground_truth(genomes)
+        return labels, time.perf_counter() - t0
+
+    def run_process(ctx, genomes):
+        t0 = time.perf_counter()
+        labels = pool.label(ctx, genomes)
+        return labels, time.perf_counter() - t0
+
+    for name in ("gaussian3x3", "smoothed_dct"):
+        section(f"{name} steady-state: {rounds} rounds x {G} genomes "
+                f"x 3 engines")
+        ctx = _fresh_ctx(name, n_qor)
+        # engine warmup: exhausts the fused verification budget and
+        # compiles the population bucket; 2 calls per switch state so
+        # both arms start steady
+        for seed in (888, 889):
+            warm_genomes = _population(ctx.accel, library, G, seed=seed)
+            run_fused(ctx, warm_genomes)
+            run_numpy(ctx, warm_genomes)
+            run_process(ctx, warm_genomes)
+        compiles_baseline = fused.stats()["compiles"]
+        assert fused.stats()["pins"] == 0, "fused engine pinned during warmup"
+
+        walls = {b: [] for b in backends}
+        cpus = {b: [] for b in backends}
+        identical = front_identical = True
+        for rnd in range(rounds):
+            genomes = _population(ctx.accel, library, G, seed=1000 + rnd)
+            # pre-pay this round's synthesis once IN EVERY ARM'S CACHE
+            # DOMAIN (parent and worker processes) so every arm measures
+            # the warm-cache regime, not who-went-first
+            run_fused(ctx, genomes)
+            run_process(ctx, genomes)
+            arms = [("numpy_batched_thread", run_numpy),
+                    ("fused_thread", run_fused),
+                    ("batched_process", run_process)]
+            if rnd % 2:
+                arms.reverse()
+            labels = {}
+            for backend, fn in arms:
+                c0 = _cpu_snapshot(worker_pids)
+                lab, wall = fn(ctx, genomes)
+                cpus[backend].append((_cpu_snapshot(worker_pids) - c0) / G)
+                walls[backend].append(wall / G)
+                labels[backend] = {k: np.asarray(lab[k]) for k in DET_KEYS}
+            base = labels["numpy_batched_thread"]
+            identical &= all(
+                np.array_equal(base[k], labels[b][k])
+                for b in backends[1:] for k in DET_KEYS
+            )
+            fronts = {b: _front(labels[b]) for b in backends}
+            front_identical &= all(
+                np.array_equal(fronts[backends[0]], fronts[b])
+                for b in backends[1:]
+            )
+        recompiles = fused.stats()["compiles"] - compiles_baseline
+
+        results = {}
+        for b in backends:
+            wall = float(np.median(walls[b]))
+            results[b] = {
+                "s_per_label": wall,
+                "labels_per_sec": 1.0 / wall,
+                "cpu_s_per_label": float(np.median(cpus[b])),
+            }
+            emit(f"labeler.fused.{name}.{b}", wall * 1e6,
+                 f"{1.0 / wall:.2f}/s")
+        speed_vs_numpy = (results["fused_thread"]["labels_per_sec"]
+                          / results["numpy_batched_thread"]["labels_per_sec"])
+        speed_vs_process = (results["fused_thread"]["labels_per_sec"]
+                            / results["batched_process"]["labels_per_sec"])
+        emit(f"labeler.fused.{name}.speedup_vs_numpy", 0.0,
+             f"{speed_vs_numpy:.2f}x")
+        emit(f"labeler.fused.{name}.speedup_vs_process", 0.0,
+             f"{speed_vs_process:.2f}x")
+        emit(f"labeler.fused.{name}.steady_state_recompiles", 0.0,
+             recompiles)
+        fused_report["workloads"][name] = {
+            "backends": results,
+            "fused_speedup_vs_numpy_batched": speed_vs_numpy,
+            "fused_speedup_vs_batched_process": speed_vs_process,
+            "labels_identical": bool(identical),
+            "front_identical": bool(front_identical),
+            "steady_state_recompiles": int(recompiles),
+            "engine_stats": fused.stats(),
+        }
+        assert identical, f"{name}: engine labels diverged"
+        assert front_identical, f"{name}: engine fronts diverged"
+        assert recompiles == 0, (
+            f"{name}: {recompiles} steady-state recompiles (bucketing "
+            f"failed to absorb the generations)"
+        )
+
+    pool.shutdown()
+    best = max(
+        wl["fused_speedup_vs_batched_process"]
+        for wl in fused_report["workloads"].values()
+    )
+    if not args.smoke and best < 1.5:
+        print(f"WARNING: best fused-vs-process speedup {best:.2f}x < 1.5x",
+              file=sys.stderr)
+
+    out_path = os.path.abspath(args.out)
+    if args.smoke:
+        print(f"smoke mode: not writing {out_path}", file=sys.stderr)
+        return
+    # merge into the existing default-mode report instead of clobbering it
+    report = {}
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            report = json.load(f)
+    report["fused"] = fused_report
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"wrote {out_path}", file=sys.stderr)
+
+
 def run_obs_bench(args):
     """Flight-recorder overhead guardrail -> BENCH_obs.json.
 
@@ -482,6 +665,11 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="tiny population, one round (CI: exercise all "
                          "three backends, don't trust the ratios)")
+    ap.add_argument("--fused", action="store_true",
+                    help="steady-state engine comparison (numpy batched "
+                         "vs fused XLA vs process pool, warm synth "
+                         "caches) merged into BENCH_labeler.json under "
+                         "the 'fused' key")
     ap.add_argument("--fleet", action="store_true",
                     help="benchmark the multi-host labeling fleet "
                          "(1 vs 2 local workers + kill -9 drill) and "
@@ -503,6 +691,8 @@ def main():
         return run_obs_bench(args)
     if args.fleet:
         return run_fleet_bench(args)
+    if args.fused:
+        return run_fused_bench(args)
 
     from repro.core.acl.library import default_library
     from repro.service.workers import ProcessPoolLabeler, warm_library

@@ -19,19 +19,26 @@ calls the same fn on the same operand values.
 
 from __future__ import annotations
 
+import threading
+from collections import OrderedDict
 from typing import Callable, Dict, List, Sequence, Tuple
 
 import numpy as np
 
-from ..core.acl.library import Circuit, Library
+from ..core.acl.library import Circuit, Library, library_fingerprint
 
 __all__ = ["mul_lut", "lut_gather", "grouped_apply"]
 
 
-# (id(library), accel-side cache key) -> (library ref, stacked LUT).
-# The library reference pins the id for the cache's lifetime; entries are
-# tiny (n_circuits x slots x 256 int64) and per-process.
-_LUT_CACHE: Dict[Tuple, Tuple[Library, np.ndarray]] = {}
+# (library content digest, accel-side cache key) -> stacked LUT.  Keyed
+# on CONTENT, not ``id(library)``: an id can be reused after the first
+# library is collected, silently serving one library's tables for
+# another.  Content-equal libraries share entries by construction.
+# Entries are tiny (n_circuits x slots x 256 int64); the LRU bound keeps
+# memory flat across long many-library campaigns.
+_LUT_CACHE: "OrderedDict[Tuple, np.ndarray]" = OrderedDict()
+_LUT_CACHE_MAX = 64
+_LUT_LOCK = threading.Lock()  # scheduler worker threads share this
 
 
 def mul_lut(
@@ -45,15 +52,24 @@ def mul_lut(
     multiplier slots: ``lut[c, s, x] == circuits[c].fn(value(x),
     constants[s])`` where ``value(x) = x`` for mul8u and ``x - 128`` for
     mul8s (the product-table index convention)."""
-    key = (id(library), kind, tag, tuple(int(c) for c in constants))
-    hit = _LUT_CACHE.get(key)
-    if hit is not None:
-        return hit[1]
+    key = (
+        library_fingerprint(library), kind, tag,
+        tuple(int(c) for c in constants),
+    )
+    with _LUT_LOCK:
+        hit = _LUT_CACHE.get(key)
+        if hit is not None:
+            _LUT_CACHE.move_to_end(key)
+            return hit
     circuits = library.kind(kind)
     off = 128 if kind == "mul8s" else 0
     cols = [int(c) + off for c in constants]
     lut = np.stack([c.table[:, cols].T for c in circuits])  # (C, S, 256)
-    _LUT_CACHE[key] = (library, lut)
+    lut.setflags(write=False)
+    with _LUT_LOCK:
+        _LUT_CACHE[key] = lut
+        while len(_LUT_CACHE) > _LUT_CACHE_MAX:
+            _LUT_CACHE.popitem(last=False)
     return lut
 
 

@@ -119,9 +119,20 @@ class Accelerator:
     ) -> np.ndarray:
         """Per-genome QoR vector; the exact reference is computed ONCE
         for the whole population and PSNR is vectorized across the
-        genome axis."""
-        from ..core import qor as qor_mod
+        genome axis.
 
+        Integer-output accelerators with a fused plan run the whole
+        (genomes, inputs) -> QoR program on-device (SSE reduction, host
+        PSNR finish); others fall through here, where simulate_batch
+        itself may still dispatch to the fused engine."""
+        from ..core import qor as qor_mod
+        from . import fused
+
+        vals = fused.try_qor_batch(
+            self, genomes, library, inputs, rank_genes=rank_genes, peak=peak
+        )
+        if vals is not None:
+            return vals
         ref = self.exact_output(inputs)
         outs = self.simulate_batch(
             genomes, library, inputs, rank_genes=rank_genes

@@ -18,6 +18,7 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..core.acl.library import Circuit, Library
+from . import fused
 from ._batchsim import grouped_apply, lut_gather, mul_lut
 from .base import Accelerator, Slot
 from .images import sample_images
@@ -110,7 +111,15 @@ class GaussianFilter(Accelerator):
     ) -> np.ndarray:
         """Vectorized population sim: one (G, m, 9) LUT gather for all
         multiplier slots, adder tree applied per distinct circuit over
-        the sub-population that chose it."""
+        the sub-population that chose it.  Dispatches to the fused XLA
+        engine first; this numpy body is the reference it verifies
+        against (and the fallback when fusing is off or pinned)."""
+        fused_out = fused.try_simulate_batch(
+            self, genomes, library, inputs,
+            rank_genes=rank_genes, per_genome_inputs=per_genome_inputs,
+        )
+        if fused_out is not None:
+            return fused_out
         genomes = np.atleast_2d(np.asarray(genomes, dtype=np.int64))
         images = np.asarray(inputs)
         G = len(genomes)
@@ -167,3 +176,50 @@ class GaussianFilter(Accelerator):
             return grouped_matmul(x, w, specs, groups)
 
         return fn, (x, w)
+
+
+# --- fused engine plan -----------------------------------------------------
+
+@fused.register_fused(GaussianFilter)
+def _gaussian_fused_plan(accel, library, eng):
+    """Whole-filter XLA program: in-jit im2col (nine shifted slices),
+    (G, m, 9) LUT gather, all-circuits adder tree with per-genome
+    selection, >>4 normalization.  Integer outputs, so the QoR tail
+    (SSE vs the exact filter) also runs on-device."""
+    import jax.numpy as jnp
+
+    lut = eng.lut("mul8u", GAUSS_COEFFS, tag=accel.name)
+
+    def stage_fn(genes, x, per_genome):
+        h, w = x.shape[-2], x.shape[-1]
+        cols = jnp.stack(
+            [
+                x[..., dy : h - 2 + dy, dx : w - 2 + dx]
+                for dy in range(3)
+                for dx in range(3)
+            ],
+            axis=-1,
+        )  # (..., n, h-2, w-2, 9), window (dy, dx) in slot column 3*dy+dx
+        if per_genome:
+            cols = cols.reshape((cols.shape[0], -1, 9))
+        else:
+            cols = cols.reshape((-1, 9))
+        prods = eng.gather(lut, genes[:, :9], cols, per_genome=per_genome)
+        vals = [prods[..., i] for i in range(9)]
+        for j, (ia, ib) in enumerate(_TREE):
+            vals.append(
+                eng.select_add(genes[:, 9 + j], vals[ia], vals[ib], signed=False)
+            )
+        out = vals[-1] >> 4
+        lead = x.shape[:-2] if per_genome else (genes.shape[0],) + x.shape[:-2]
+        return out.reshape(lead + (h - 2, w - 2))
+
+    return fused.FusedPlan(
+        key=(),
+        stage_fn=stage_fn,
+        prep=lambda inputs: np.ascontiguousarray(
+            np.asarray(inputs), dtype=np.int32
+        ),
+        post=lambda raw, inputs, per_genome: raw.astype(np.int64),
+        qor_ref=lambda a, inputs: np.asarray(a.exact_output(inputs)),
+    )

@@ -25,6 +25,7 @@ from typing import Callable, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..core.acl.library import Circuit, Library
+from . import fused
 from ._batchsim import grouped_apply, lut_gather, mul_lut
 from .base import Accelerator, Slot
 from .images import sample_images
@@ -141,6 +142,12 @@ class MCMAccelerator(Accelerator):
         rank_genes: bool = False,
         per_genome_inputs: bool = False,
     ) -> np.ndarray:
+        fused_out = fused.try_simulate_batch(
+            self, genomes, library, inputs,
+            rank_genes=rank_genes, per_genome_inputs=per_genome_inputs,
+        )
+        if fused_out is not None:
+            return fused_out
         genomes = np.atleast_2d(np.asarray(genomes, dtype=np.int64))
         return _mcm_apply_batch(
             self.row, np.asarray(inputs), genomes[:, :4], genomes[:, 4:7],
@@ -277,6 +284,12 @@ class HEVCDct(Accelerator):
         rank_genes: bool = False,
         per_genome_inputs: bool = False,
     ) -> np.ndarray:
+        fused_out = fused.try_simulate_batch(
+            self, genomes, library, inputs,
+            rank_genes=rank_genes, per_genome_inputs=per_genome_inputs,
+        )
+        if fused_out is not None:
+            return fused_out
         genomes = np.atleast_2d(np.asarray(genomes, dtype=np.int64))
         coeffs = self._transform_batch(
             _blocks(np.asarray(inputs)), genomes, library,
@@ -355,3 +368,95 @@ class HEVCDct(Accelerator):
             return jnp.concatenate(outs2, axis=1)
 
         return fn, (x, w)
+
+
+# --- fused engine plans ----------------------------------------------------
+
+def _mcm_fused_apply(eng, lut, x, mul_genes, add_genes, per_genome):
+    """Traceable twin of ``_mcm_apply_batch``: x (..., 4) residuals
+    (leading genome axis iff per_genome), returns (G, ...)."""
+    G = mul_genes.shape[0]
+    mid = x.shape[1:-1] if per_genome else x.shape[:-1]
+    cols = x + 128
+    cols = cols.reshape((G, -1, 4)) if per_genome else cols.reshape((-1, 4))
+    prods = eng.gather(lut, mul_genes, cols, per_genome=per_genome)
+    s0 = eng.select_add(add_genes[:, 0], prods[..., 0], prods[..., 1], signed=True)
+    s1 = eng.select_add(add_genes[:, 1], prods[..., 2], prods[..., 3], signed=True)
+    out = eng.select_add(add_genes[:, 2], s0, s1, signed=True)
+    return out.reshape((G,) + mid)
+
+
+def _blocks_fused(images):
+    """Traceable twin of ``_blocks`` (int32 domain)."""
+    import jax.numpy as jnp
+
+    lead, (n, h, w) = images.shape[:-3], images.shape[-3:]
+    h4, w4 = h - h % 4, w - w % 4
+    x = images[..., :h4, :w4].reshape(lead + (n, h4 // 4, 4, w4 // 4, 4))
+    x = jnp.moveaxis(x, -2, -3).reshape(lead + (-1, 4, 4))
+    return x - 128
+
+
+def _prep_i32(inputs):
+    return np.ascontiguousarray(np.asarray(inputs), dtype=np.int32)
+
+
+@fused.register_fused(MCMAccelerator)
+def _mcm_fused_plan(accel, library, eng):
+    """Single-MCM XLA program; integer outputs, so QoR reduces on-device
+    against the exact ``inputs @ C[row]``."""
+    lut = eng.lut("mul8s", HEVC_C[accel.row], tag=f"mcm{accel.row}")
+
+    def stage_fn(genes, x, per_genome):
+        return _mcm_fused_apply(
+            eng, lut, x, genes[:, :4], genes[:, 4:7], per_genome
+        )
+
+    return fused.FusedPlan(
+        key=(),
+        stage_fn=stage_fn,
+        prep=_prep_i32,
+        post=lambda raw, inputs, per_genome: raw.astype(np.int64),
+        qor_ref=lambda a, inputs: np.asarray(a.exact_output(inputs)),
+    )
+
+
+@fused.register_fused(HEVCDct)
+def _hevc_fused_plan(accel, library, eng):
+    """Full 2-D DCT as one XLA program: in-jit blocking, both MCM
+    passes, renorm/clip between.  The device returns the INTEGER
+    coefficients; the float64 inverse-transform tail stays on the host
+    (``_reconstruct``) because float64 matmul contraction order — and
+    hence bits — is BLAS/XLA-implementation-defined, while the host
+    path is shared with the numpy engine verbatim."""
+    import jax.numpy as jnp
+
+    luts = [eng.lut("mul8s", HEVC_C[r], tag=f"mcm{r}") for r in range(4)]
+
+    def stage_fn(genes, x, per_genome):
+        blocks = _blocks_fused(x)
+
+        def mcm(r, v, per_g):
+            return _mcm_fused_apply(
+                eng, luts[r], v,
+                genes[:, 7 * r : 7 * r + 4],
+                genes[:, 7 * r + 4 : 7 * r + 7],
+                per_g,
+            )
+
+        xt = jnp.swapaxes(blocks, -1, -2)
+        t = jnp.stack([mcm(r, xt, per_genome) for r in range(4)], axis=-2)
+        t = jnp.clip((t + (1 << (_SHIFT1 - 1))) >> _SHIFT1, -128, 127)
+        y = jnp.stack([mcm(r, t, True) for r in range(4)], axis=-1)
+        return y  # integer coefficients (G, ..., m, 4, 4)
+
+    return fused.FusedPlan(
+        key=(),
+        stage_fn=stage_fn,
+        prep=_prep_i32,
+        post=lambda raw, inputs, per_genome: accel._reconstruct(
+            raw.astype(np.int64)
+        ),
+        qor_ref=None,
+        device_natural=False,
+    )

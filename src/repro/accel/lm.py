@@ -206,3 +206,11 @@ class LMAccelerator(Accelerator):
             )
             total += 2.0 * n_active * share * tokens * (base + rank)
         return total
+
+
+# The LM is not a LUT workload: its qor path is a deduped bf16 forward
+# per distinct genome, not a table-driven population sim.  Opt it out of
+# the fused population engine explicitly (counted as a pin-by-design).
+from . import fused as _fused  # noqa: E402
+
+_fused.register_unfused(LMAccelerator)

@@ -22,6 +22,7 @@ from __future__ import annotations
 import numpy as np
 
 from ..hierarchy.staged import Coupling, StagedPipeline
+from . import fused
 from .gaussian import GaussianFilter
 from .hevc_dct import HEVCDct
 
@@ -31,6 +32,16 @@ __all__ = ["SmoothedDct"]
 def _sim_coupling(y: np.ndarray) -> np.ndarray:
     """Behavioral: filtered image -> u8 pixel domain for block extraction."""
     return np.clip(y, 0, 255)
+
+
+def _sim_coupling_fused(y):
+    """Traceable twin of ``_sim_coupling`` for whole-pipeline fusion."""
+    import jax.numpy as jnp
+
+    return jnp.clip(y, 0, 255)
+
+
+fused.register_coupling("u8_clip_reblock", _sim_coupling_fused)
 
 
 def _deploy_coupling(y):

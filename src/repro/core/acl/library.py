@@ -20,6 +20,8 @@ Everything is cached on first access: the registry is cheap to import.
 from __future__ import annotations
 
 import functools
+import hashlib
+import weakref
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
@@ -31,6 +33,7 @@ __all__ = [
     "Circuit",
     "Library",
     "default_library",
+    "library_fingerprint",
     "MUL8U",
     "MUL8S",
     "ADD16",
@@ -342,6 +345,49 @@ class Library:
 @functools.lru_cache(maxsize=1)
 def default_library() -> Library:
     return Library(_build_mul8u() + _build_mul8s() + _build_add16())
+
+
+# fixed probe operands per circuit kind for behavioral fingerprinting
+_PROBE_OPS = {
+    "mul8u": (np.arange(0, 256, 15, dtype=np.int64),
+              np.arange(255, -1, -15, dtype=np.int64)),
+    "mul8s": (np.arange(-128, 128, 15, dtype=np.int64),
+              np.arange(127, -129, -15, dtype=np.int64)),
+    "add16": (np.arange(-32768, 32768, 3855, dtype=np.int64),
+              np.arange(32767, -32769, -3855, dtype=np.int64)),
+}
+
+# Memoized per live Library OBJECT: weak keys cannot alias two libraries
+# the way ``id(library)`` can after the first is collected and the id is
+# reused, and content-equal libraries hash to the same digest anyway.
+_FP_MEMO: "weakref.WeakKeyDictionary[Library, str]" = weakref.WeakKeyDictionary()
+
+
+def library_fingerprint(library: Library) -> str:
+    """Content digest of the genome decoding map AND circuit behavior.
+
+    Genomes store indices into the per-kind lists, so order and names
+    matter — but so does each circuit's behavior: structural knobs plus
+    a fixed behavioral probe of ``fn`` are hashed so that editing a
+    circuit without renaming it re-keys every content-addressed consumer
+    (label store, LUT caches, fused-sim jit cache) instead of serving
+    stale state."""
+    fp = _FP_MEMO.get(library)
+    if fp is not None:
+        return fp
+    h = hashlib.sha256()
+    for kind, circuits in sorted(library.by_kind.items()):
+        for c in circuits:
+            h.update(repr((kind, c.name, c.trunc_bits, c.pp_rows,
+                           c.carry_window, bool(c.is_exact),
+                           c.native_width)).encode())
+            probe = _PROBE_OPS.get(kind)
+            if probe is not None:
+                out = np.asarray(c.fn(*probe)).astype(np.int64)
+                h.update(out.tobytes())
+    fp = h.hexdigest()[:16]
+    _FP_MEMO[library] = fp
+    return fp
 
 
 # Convenience kind constants

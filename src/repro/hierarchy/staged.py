@@ -205,7 +205,20 @@ class StagedPipeline(Accelerator):
         """Population sim of the chain: each stage evaluates the whole
         genome batch at once (vectorized where the stage supports it),
         and the per-genome intermediate stack flows through the couplings
-        elementwise."""
+        elementwise.
+
+        When every stage has a fused plan and every coupling a traceable
+        twin, the WHOLE chain dispatches as one XLA program; otherwise
+        this body runs and each stage's own dispatch still fuses the
+        fusible stages individually."""
+        from ..accel import fused
+
+        fused_out = fused.try_simulate_batch(
+            self, genomes, library, inputs,
+            rank_genes=rank_genes, per_genome_inputs=per_genome_inputs,
+        )
+        if fused_out is not None:
+            return fused_out
         genomes = np.atleast_2d(np.asarray(genomes))
         stage_genomes = self.split_genome_batch(genomes, rank_genes=rank_genes)
         x, per = inputs, per_genome_inputs
@@ -430,3 +443,10 @@ class StageView(Accelerator):
 
     def label_fingerprint(self) -> str:
         return f"stage{self.index}@{self.pipeline.label_fingerprint()}"
+
+
+# whole-chain fusion: one XLA program per pipeline when every stage and
+# coupling has a traceable twin (registered here, after the class exists)
+from ..accel import fused as _fused  # noqa: E402
+
+_fused._register_staged()

@@ -6,6 +6,10 @@
 #                      training-traffic class, §Perf)
 #   selective_scan   — fused Mamba-1 scan (removes the SSM state-stream
 #                      traffic, §Perf cell B)
-from . import approx_matmul, flash_attention, selective_scan
+#   population_lut   — the batched behavioral sim's population LUT
+#                      gather (the fused labeling engine's inner op)
+from . import approx_matmul, flash_attention, population_lut, selective_scan
 
-__all__ = ["approx_matmul", "flash_attention", "selective_scan"]
+__all__ = [
+    "approx_matmul", "flash_attention", "population_lut", "selective_scan",
+]

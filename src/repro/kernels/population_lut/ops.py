@@ -1,0 +1,92 @@
+"""Dispatch layer for the population LUT gather.
+
+``gather_xla`` is the traceable building block the fused engine inlines
+into its per-accelerator XLA programs (CPU and TPU alike — on CPU a
+Pallas interpret round-trip would cost more than the gather saves);
+``population_lut_gather`` is the standalone op with backend selection,
+mirroring ``approx_matmul.ops``: real Pallas kernel on TPU, interpret
+mode for validation, numpy reference otherwise.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import population_lut_gather_pallas
+from .ref import population_lut_gather_ref
+
+__all__ = ["gather_xla", "population_lut_gather", "on_tpu"]
+
+
+def on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
+
+
+def gather_xla(
+    flat_lut: jnp.ndarray,   # (C*S*256,) flattened (C, S, 256) stack
+    genes: jnp.ndarray,      # (G, S) int32
+    cols: jnp.ndarray,       # (M, S) or (G, M, S) int32 table indices
+    *,
+    nslots: int,
+    per_genome: bool = False,
+) -> jnp.ndarray:
+    """Traceable ``out[g, m, s] = lut[genes[g, s], s, cols[.., m, s]]``
+    as one flat XLA gather; fuses into the surrounding jit."""
+    sidx = jnp.arange(nslots, dtype=jnp.int32)[None, None, :]
+    base = (genes[:, None, :] * nslots + sidx) * 256
+    idx = base + (cols if per_genome else cols[None])
+    return jnp.take(flat_lut, idx.reshape(-1), axis=0).reshape(idx.shape)
+
+
+def population_lut_gather(
+    lut: np.ndarray,
+    genes: np.ndarray,
+    cols: np.ndarray,
+    *,
+    per_genome: bool = False,
+    backend: Optional[str] = None,
+) -> np.ndarray:
+    """(G, M, S) gathered products; ``backend``: "pallas",
+    "pallas_interpret", "xla", "ref" or None (auto: pallas on TPU, xla
+    elsewhere)."""
+    if backend is None:
+        backend = "pallas" if on_tpu() else "xla"
+    if backend == "ref":
+        return population_lut_gather_ref(lut, genes, cols, per_genome=per_genome)
+    lut32 = np.asarray(lut, dtype=np.int32)
+    genes32 = np.asarray(genes, dtype=np.int32)
+    cols32 = np.asarray(cols, dtype=np.int32)
+    if backend in ("pallas", "pallas_interpret"):
+        G, S = genes32.shape
+        M = cols32.shape[-2]
+        bg = _block(G, 8)
+        bm = _block(M, 256)
+        out = population_lut_gather_pallas(
+            jnp.asarray(lut32), jnp.asarray(genes32), jnp.asarray(cols32),
+            per_genome=per_genome, bg=bg, bm=bm,
+            interpret=(backend == "pallas_interpret"),
+        )
+        return np.asarray(out)
+    if backend == "xla":
+        out = jax.jit(gather_xla, static_argnames=("nslots", "per_genome"))(
+            jnp.asarray(lut32).reshape(-1), jnp.asarray(genes32),
+            jnp.asarray(cols32), nslots=lut32.shape[1],
+            per_genome=per_genome,
+        )
+        return np.asarray(out)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def _block(n: int, target: int) -> int:
+    """Largest divisor of ``n`` that is <= target (tile size picker)."""
+    b = min(n, target)
+    while n % b:
+        b -= 1
+    return b

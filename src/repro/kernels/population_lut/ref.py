@@ -1,0 +1,31 @@
+"""Numpy reference semantics for the population LUT gather.
+
+Bit-exact mirror of ``accel._batchsim.lut_gather`` on a flat (M, S)
+element layout: the kernels and the fused engine are validated against
+this, and this in turn is validated against the per-genome loop.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["population_lut_gather_ref"]
+
+
+def population_lut_gather_ref(
+    lut: np.ndarray,
+    genes: np.ndarray,
+    cols: np.ndarray,
+    *,
+    per_genome: bool = False,
+) -> np.ndarray:
+    """``out[g, m, s] = lut[genes[g, s], s, cols[m, s]]``.
+
+    ``lut``: (C, S, 256); ``genes``: (G, S) circuit indices; ``cols``:
+    table indices, (M, S) shared across the population or (G, M, S)
+    per-genome.  Returns (G, M, S) products in ``lut``'s dtype."""
+    G, S = genes.shape
+    sl = np.arange(S)[None, None, :]
+    if per_genome:
+        return lut[genes[:, None, :], sl, cols]
+    return lut[genes[:, None, :], sl, cols[None]]

@@ -1051,7 +1051,10 @@ class CampaignManager:
         store hits, in-flight dedup hits, coalesced batches (scheduler);
         per-backend labeler counters incl. the process pool's aggregated
         worker synthesis counters (scheduler.labeler); synth-cache hit
-        rate and verification state (synth)."""
+        rate and verification state (synth); fused behavioral-sim engine
+        counters for THIS process (sim.fused — worker-process counters
+        ride the labeler stats)."""
+        from ..accel import fused
         from ..core.features import synth as synth_mod
 
         with self._lock:
@@ -1069,6 +1072,10 @@ class CampaignManager:
                 "fast_codegen": synth_mod.FAST_CODEGEN,
                 "persistent": hasattr(cache, "path"),
                 "cache": cache.stats(),
+            },
+            "sim": {
+                "fused_enabled": fused.enabled(),
+                "fused": fused.stats(),
             },
             "obs": {
                 "tracing": obs.enabled(),

@@ -41,7 +41,7 @@ except ImportError:  # pragma: no cover - non-POSIX
 import numpy as np
 
 from .. import obs
-from ..core.acl.library import Library
+from ..core.acl.library import Library, library_fingerprint
 from ..core.features import synth
 
 __all__ = [
@@ -62,36 +62,9 @@ LABEL_KEYS = synth.LABEL_KEYS
 STORE_SCHEMA_VERSION = 1
 
 
-# fixed probe operands per circuit kind for behavioral fingerprinting
-_PROBE_OPS = {
-    "mul8u": (np.arange(0, 256, 15, dtype=np.int64),
-              np.arange(255, -1, -15, dtype=np.int64)),
-    "mul8s": (np.arange(-128, 128, 15, dtype=np.int64),
-              np.arange(127, -129, -15, dtype=np.int64)),
-    "add16": (np.arange(-32768, 32768, 3855, dtype=np.int64),
-              np.arange(32767, -32769, -3855, dtype=np.int64)),
-}
-
-
-def _library_fingerprint(library: Library) -> str:
-    """Digest of the genome decoding map AND circuit content.
-
-    Genomes store indices into the per-kind lists, so order and names
-    matter — but so does each circuit's behavior: structural knobs plus
-    a fixed behavioral probe of ``fn`` are hashed so that editing a
-    circuit without renaming it re-keys the store instead of serving
-    stale persisted labels."""
-    h = hashlib.sha256()
-    for kind, circuits in sorted(library.by_kind.items()):
-        for c in circuits:
-            h.update(repr((kind, c.name, c.trunc_bits, c.pp_rows,
-                           c.carry_window, bool(c.is_exact),
-                           c.native_width)).encode())
-            probe = _PROBE_OPS.get(kind)
-            if probe is not None:
-                out = np.asarray(c.fn(*probe)).astype(np.int64)
-                h.update(out.tobytes())
-    return h.hexdigest()[:16]
+# Content digest of a library (moved to core.acl.library so the batched
+# sim's LUT caches can key on it without importing the service tier).
+_library_fingerprint = library_fingerprint
 
 
 def _accel_fingerprint(accel) -> str:

@@ -85,6 +85,12 @@ def _init_worker(xla_flags: str = "", synth_cache_path: str = "") -> None:
         synth.set_shared_synth_cache(synth.JsonlSynthCache(synth_cache_path))
     lib = default_library()
     warm_library(lib)
+    # pre-build (and probe-verify) the fused sim engine's adder twins so
+    # the first labeled chunk only pays its own shape's XLA compile —
+    # structurally identical contexts then land in warm jit buckets
+    from ..accel import fused
+
+    fused.warm(lib)
     _WORKER_STATE["library"] = lib
     _WORKER_STATE["ctxs"] = {}
 
@@ -141,6 +147,9 @@ def _worker_label(
     # finished spans on the result so the parent can aggregate/ingest
     # them without an extra round trip
     out["_synth_stats"] = {"pid": os.getpid(), **scache.stats()}
+    from ..accel import fused
+
+    out["_sim_stats"] = {"pid": os.getpid(), **fused.stats()}
     out["_spans"] = rec.snapshot()
     rec.clear()
     return out
@@ -175,6 +184,7 @@ class ProcessPoolLabeler:
         self._lock = threading.Lock()
         self._safe_fps: Dict[str, bool] = {}   # ctx fingerprint -> verdict
         self._worker_synth: Dict[int, Dict] = {}  # pid -> latest counters
+        self._worker_sim: Dict[int, Dict] = {}    # pid -> latest fused-sim counters
         self.n_chunks = obs.REGISTRY.counter(
             "repro_labeler_chunks_total", "chunks sent to worker processes")
         self.n_labeled = obs.REGISTRY.counter(
@@ -239,6 +249,9 @@ class ProcessPoolLabeler:
                 ws = r.get("_synth_stats")
                 if ws:   # counters are cumulative: latest-per-pid wins
                     self._worker_synth[ws["pid"]] = ws
+                sim = r.get("_sim_stats")
+                if sim:
+                    self._worker_sim[sim["pid"]] = sim
         for r in results:
             rec.ingest(r.get("_spans") or ())
         return {
@@ -264,12 +277,20 @@ class ProcessPoolLabeler:
         total = served + synth_agg["compiles"]
         synth_agg["hit_rate"] = (served / total) if total else 0.0
         synth_agg["workers_reporting"] = len(per_worker)
+        with self._lock:
+            per_worker_sim = list(self._worker_sim.values())
+        sim_agg = {k: sum(int(w.get(k, 0)) for w in per_worker_sim)
+                   for k in ("fused_calls", "fused_qor_calls", "compiles",
+                             "bucket_hits", "verify_calls", "pins",
+                             "fallback_calls")}
+        sim_agg["workers_reporting"] = len(per_worker_sim)
         return {
             "workers": self.n_workers,
             "chunks": int(self.n_chunks.value),
             "labeled": int(self.n_labeled.value),
             "synth_cache_path": self.synth_cache_path,
             "synth": synth_agg,
+            "sim": sim_agg,
         }
 
     def shutdown(self, *, wait: bool = True) -> None:

@@ -25,3 +25,15 @@ def _reset_synth_engine_state():
 
     synth.reset_fast_codegen()
     yield
+
+
+@pytest.fixture(autouse=True)
+def _reset_fused_sim_state():
+    """The fused population-sim engine keeps module-global state too
+    (compiled programs, plan/pin/verification history, counters); tests
+    must not inherit another test's pins or verification budget."""
+    from repro.accel import fused
+
+    fused.reset()
+    yield
+    fused.reset()

@@ -1,0 +1,282 @@
+"""Fused population engine: the three coexisting engines (per-genome
+loop, numpy batched, fused XLA) must be provably identical — bit-exact
+outputs and QoR — across every registered LUT accelerator, including
+staged pipelines and their in-situ stage views; plus the engine's
+operational contract (kill switch, verify-then-pin, bucketing, caches).
+"""
+
+import numpy as np
+import pytest
+
+from repro.accel import GaussianFilter, HEVCDct, MCMAccelerator
+from repro.accel import fused
+from repro.accel.base import RANK_CHOICES, Accelerator
+from repro.accel.smoothed_dct import SmoothedDct
+from repro.core.acl.library import default_library, library_fingerprint
+
+LIB = default_library()
+
+
+def _pop(accel, G, seed=0, rank_genes=False):
+    """Random population; row 0 is the all-exact genome."""
+    rng = np.random.default_rng(seed)
+    cols = [
+        rng.integers(0, len(LIB.kind(s.kind)), size=G) for s in accel.slots
+    ]
+    g = np.stack(cols, axis=1).astype(np.int64)
+    for i, s in enumerate(accel.slots):
+        g[0, i] = LIB.exact_index(s.kind)
+    if rank_genes:
+        nm = len(accel.mul_slot_indices())
+        ranks = rng.integers(0, len(RANK_CHOICES), size=(G, nm))
+        g = np.concatenate([g, ranks], axis=1)
+    return g
+
+
+def _numpy_sim(accel, g, x, **kw):
+    return fused._numpy_reference("sim", accel, g, LIB, x, rank_genes=kw.pop(
+        "rank_genes", False), **kw)
+
+
+def _numpy_qor(accel, g, x, *, rank_genes=False):
+    return fused._numpy_reference("qor", accel, g, LIB, x,
+                                  rank_genes=rank_genes)
+
+
+FUSIBLE = [GaussianFilter, lambda: MCMAccelerator(0),
+           lambda: MCMAccelerator(2), HEVCDct, SmoothedDct]
+
+
+@pytest.mark.parametrize("make", FUSIBLE)
+def test_three_engines_bit_identical(make):
+    accel = make()
+    g = _pop(accel, 10, seed=3)
+    x = accel.sample_inputs(2, seed=1)
+
+    fused_out = accel.simulate_batch(g, LIB, x)
+    numpy_out = _numpy_sim(accel, g, x)
+    loop_out = Accelerator.simulate_batch(accel, g, LIB, x)
+
+    assert fused.stats()["fused_calls"] + fused.stats()["verify_calls"] > 0
+    assert fused_out.shape == numpy_out.shape
+    assert fused_out.dtype == numpy_out.dtype
+    assert np.array_equal(fused_out, numpy_out)
+    assert np.array_equal(
+        np.asarray(numpy_out, np.float64), np.asarray(loop_out, np.float64)
+    )
+
+
+@pytest.mark.parametrize("make", FUSIBLE)
+def test_qor_batch_bit_identical(make):
+    accel = make()
+    g = _pop(accel, 8, seed=5)
+    x = accel.sample_inputs(2, seed=2)
+    got = accel.qor_batch(g, LIB, x)
+    want = _numpy_qor(accel, g, x)
+    assert np.array_equal(got, want)
+    assert got[0] == 100.0  # row 0 is the exact genome
+    assert fused.stats()["pins"] == 0
+
+
+def test_rank_genes_columns_ignored_identically():
+    accel = SmoothedDct()
+    g = _pop(accel, 6, seed=9, rank_genes=True)
+    x = accel.sample_inputs(2, seed=0)
+    got = accel.simulate_batch(g, LIB, x, rank_genes=True)
+    want = _numpy_sim(accel, g, x, rank_genes=True)
+    assert np.array_equal(got, want)
+
+
+def test_per_genome_inputs_path():
+    accel = GaussianFilter()
+    G = 5
+    g = _pop(accel, G, seed=2)
+    x = accel.sample_inputs(2, seed=4)
+    rng = np.random.default_rng(0)
+    xg = np.clip(
+        np.repeat(x[None], G, axis=0) + rng.integers(0, 2, (G,) + x.shape),
+        0, 255,
+    ).astype(x.dtype)
+    got = accel.simulate_batch(g, LIB, xg, per_genome_inputs=True)
+    want = _numpy_sim(accel, g, xg, per_genome_inputs=True)
+    assert np.array_equal(got, want)
+
+
+def test_stage_views_in_situ_qor():
+    pipe = SmoothedDct()
+    x = pipe.sample_inputs(2, seed=1)
+    for sv in pipe.stage_views():
+        g = _pop(sv, 6, seed=sv.index)
+        got = sv.qor_batch(g, LIB, x)
+        want = _numpy_qor(sv, g, x)
+        assert np.array_equal(got, want), sv.name
+
+
+def test_whole_pipeline_fuses_as_one_program():
+    pipe = SmoothedDct()
+    g = _pop(pipe, 6, seed=1)
+    x = pipe.sample_inputs(2, seed=1)
+    pipe.simulate_batch(g, LIB, x)
+    pipe.simulate_batch(g, LIB, x)
+    pipe.simulate_batch(g, LIB, x)  # past the verification budget
+    st = fused.stats()
+    # one compiled program for the chain — not one per stage
+    assert st["compiles"] == 1
+    assert st["fused_calls"] >= 1
+
+
+def test_kill_switch(monkeypatch):
+    accel = GaussianFilter()
+    g = _pop(accel, 4)
+    x = accel.sample_inputs(1, seed=0)
+    monkeypatch.setenv("REPRO_SIM_FUSED", "0")
+    out = accel.simulate_batch(g, LIB, x)
+    assert fused.stats()["fused_calls"] == 0
+    assert fused.stats()["compiles"] == 0
+    monkeypatch.delenv("REPRO_SIM_FUSED")
+    assert np.array_equal(accel.simulate_batch(g, LIB, x), out)
+
+
+def test_divergent_plan_pins_to_numpy():
+    accel = GaussianFilter()
+    g = _pop(accel, 4, seed=7)
+    x = accel.sample_inputs(1, seed=0)
+    plan = fused._plan_for(accel, LIB)
+    orig = plan.post
+    plan.post = lambda raw, inputs, per_genome: orig(raw, inputs, per_genome) + 1
+    out = accel.simulate_batch(g, LIB, x)  # verification catches the lie
+    st = fused.stats()
+    assert st["pins"] == 1 and plan.key in fused._PINNED
+    # the caller still got the CORRECT (numpy) result
+    assert np.array_equal(out, _numpy_sim(accel, g, x))
+    # and the family stays pinned: no further fused calls
+    accel.simulate_batch(g, LIB, x)
+    assert fused.stats()["fused_calls"] == 0
+
+
+def test_lm_is_registered_unfused():
+    from repro.accel.lm import LMAccelerator
+
+    assert fused._BUILDERS[LMAccelerator] is None
+
+
+def test_bucketing_zero_steady_state_recompiles():
+    accel = GaussianFilter()
+    x = accel.sample_inputs(2, seed=0)
+    for G in (9, 16, 12, 11, 16, 13):  # drifting survivor counts
+        accel.qor_batch(_pop(accel, G, seed=G), LIB, x)
+    st = fused.stats()
+    assert st["compiles"] == 1  # all Gs land in the 16-bucket
+    assert st["bucket_hits"] >= 5
+
+
+def test_adder_twins_probe_verified_per_library():
+    eng = fused._engine_for(LIB)
+    assert eng is not None and len(eng.twins) == len(LIB.kind("add16"))
+    # exhaustive-ish check on an independent operand set
+    rng = np.random.default_rng(99)
+    a = rng.integers(0, 1 << 16, size=4096, dtype=np.int64)
+    b = rng.integers(0, 1 << 16, size=4096, dtype=np.int64)
+    sh = fused._shared(a, b)
+    for c, tw in zip(LIB.kind("add16"), eng.twins):
+        assert np.array_equal(
+            np.asarray(tw(sh), np.int64), np.asarray(c.fn(a, b), np.int64)
+        ), c.name
+
+
+def test_unknown_adder_model_unfuses_library():
+    from repro.core.acl.library import Circuit, Library
+
+    weird = Circuit("add16_weird", "add16", lambda a, b: (a + b) ^ 1)
+    lib2 = Library(list(LIB.circuits) + [weird])
+    assert fused._engine_for(lib2) is None
+    accel = GaussianFilter()
+    g = _pop(accel, 4)
+    # population indices must stay valid for the base library's kinds
+    x = accel.sample_inputs(1, seed=0)
+    out = accel.simulate_batch(g, LIB, x)  # base library still fuses
+    assert np.array_equal(out, _numpy_sim(accel, g, x))
+
+
+def test_pallas_interpret_kernel_matches_ref():
+    from repro.kernels.population_lut import (
+        population_lut_gather, population_lut_gather_ref,
+    )
+
+    rng = np.random.default_rng(3)
+    C, S, G, M = 5, 9, 8, 512
+    lut = rng.integers(0, 1 << 15, size=(C, S, 256), dtype=np.int64)
+    genes = rng.integers(0, C, size=(G, S), dtype=np.int64)
+    cols = rng.integers(0, 256, size=(M, S), dtype=np.int64)
+    want = population_lut_gather_ref(lut, genes, cols)
+    for backend in ("xla", "pallas_interpret"):
+        got = population_lut_gather(lut, genes, cols, backend=backend)
+        assert np.array_equal(np.asarray(got, np.int64), want), backend
+    # per-genome column stacks
+    colsg = rng.integers(0, 256, size=(G, M, S), dtype=np.int64)
+    want = population_lut_gather_ref(lut, genes, colsg, per_genome=True)
+    got = population_lut_gather(lut, genes, colsg, backend="pallas_interpret",
+                                per_genome=True)
+    assert np.array_equal(np.asarray(got, np.int64), want)
+
+
+# --- satellite regressions: content-keyed caches ---------------------------
+
+def test_lut_cache_keyed_on_content_not_identity():
+    from repro.accel import _batchsim
+    from repro.core.acl.library import Library
+
+    # two distinct-but-content-equal libraries share one entry
+    lib_a = LIB.subset([c.name for c in LIB.circuits])
+    lib_b = LIB.subset([c.name for c in LIB.circuits])
+    assert lib_a is not lib_b
+    assert library_fingerprint(lib_a) == library_fingerprint(lib_b)
+    consts = np.array([1, 2, 3], dtype=np.int64)
+    with _batchsim._LUT_LOCK:
+        _batchsim._LUT_CACHE.clear()
+    lut_a = _batchsim.mul_lut(lib_a, "mul8u", consts, tag="t")
+    lut_b = _batchsim.mul_lut(lib_b, "mul8u", consts, tag="t")
+    assert lut_a is lut_b
+    assert len(_batchsim._LUT_CACHE) == 1
+
+    # content-DIFFERENT library with the same tag must not alias
+    names = [c.name for c in LIB.circuits if c.kind != "mul8u"]
+    names += [c.name for c in LIB.kind("mul8u")[:3]]
+    lib_c = LIB.subset(names)
+    lut_c = _batchsim.mul_lut(lib_c, "mul8u", consts, tag="t")
+    assert lut_c.shape[0] == 3 and lut_c is not lut_a
+
+
+def test_lut_cache_bounded_lru():
+    from repro.accel import _batchsim
+
+    with _batchsim._LUT_LOCK:
+        _batchsim._LUT_CACHE.clear()
+    for i in range(_batchsim._LUT_CACHE_MAX + 5):
+        consts = np.array([1, 2, i + 1], dtype=np.int64)
+        _batchsim.mul_lut(LIB, "mul8u", consts, tag=f"bound{i}")
+    assert len(_batchsim._LUT_CACHE) == _batchsim._LUT_CACHE_MAX
+
+
+def test_im2col_cache_bounded_lru():
+    from repro.accel import gaussian
+
+    with gaussian._IM2COL_LOCK:
+        gaussian._IM2COL_CACHE.clear()
+    for i in range(gaussian._IM2COL_CACHE_MAX + 4):
+        imgs = np.full((1, 8, 8), i, dtype=np.uint8)
+        gaussian._im2col_cached(imgs)
+    assert len(gaussian._IM2COL_CACHE) == gaussian._IM2COL_CACHE_MAX
+    # a repeated hit refreshes recency instead of growing the cache
+    imgs = np.full((1, 8, 8), 0, dtype=np.uint8)
+    a = gaussian._im2col_cached(imgs)
+    b = gaussian._im2col_cached(imgs)
+    assert a is b
+
+
+def test_stats_shape():
+    st = fused.stats()
+    for key in ("compiles", "bucket_hits", "pins", "verify_calls",
+                "fused_calls", "fused_qor_calls", "pinned_plans",
+                "compiled_programs"):
+        assert key in st
