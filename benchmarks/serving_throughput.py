@@ -1,0 +1,256 @@
+"""Serving-tier benchmark -> BENCH_serving.json.
+
+Measures the three headline properties of the serving tier
+(repro.serving):
+
+  1. **Campaign -> front -> serving** — a real mcm2 campaign's merged
+     front loaded into an engine through the manager hub, one request
+     served at every named tier (exact / balanced / budget).
+  2. **Continuous-batching throughput** — a mixed-tier request storm
+     against a gaussian3x3 engine over a 4-point catalog: requests/sec,
+     responses-per-batch-group, and MEASURED per-tier QoR (PSNR vs the
+     exact output on each request's own inputs) across >= 3 distinct
+     front operating points.
+  3. **Hot-swap drill** — an improved front installed while the request
+     stream is in flight: post-swap requests pick up the new catalog
+     version, requests pinned to the old version keep byte-identical
+     outputs and QoR.
+
+Run:  PYTHONPATH=src python benchmarks/serving_throughput.py [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from common import emit, section  # noqa: E402
+
+CAMPAIGN_SPEC = dict(
+    accel="mcm2",
+    n_train=48,
+    n_qor_samples=2,
+    pop_size=16,
+    n_parents=8,
+    n_generations=4,
+    seed=0,
+)
+SMOKE_SPEC = dict(CAMPAIGN_SPEC, n_train=10, pop_size=8, n_parents=4,
+                  n_generations=2)
+
+TIERS = ("exact", "balanced", "budget")
+
+
+def gauss_catalog(accel, lib, n_points: int = 4):
+    """A catalog of genuinely distinct gaussian3x3 operating points:
+    the exact genome plus progressively more-approximate variants.
+    Labels are nominal (energy proxies) — the benchmark reports the
+    MEASURED per-request QoR, which is the point."""
+    from repro.serving import FrontCatalog
+
+    n_mul = len(lib.kind("mul8u"))
+    g = accel.exact_genome(lib)
+    genomes, front = [], []
+    for k in range(n_points):
+        gk = g.copy()
+        for i in range(min(3 * k, 9)):
+            gk[i] = (gk[i] + 1 + k) % n_mul
+        genomes.append(gk.tolist())
+        front.append([-(100.0 - 20.0 * k), 10.0 - 2.0 * k])
+    return FrontCatalog.from_front(accel.name, genomes, front)
+
+
+def bench_campaign_front(spec: dict) -> dict:
+    """mcm2: campaign -> merged global front -> hub engine -> one
+    request per tier."""
+    from repro.service import CampaignManager, CampaignSpec, make_accelerator
+
+    mgr = CampaignManager(eval_workers=2, campaign_workers=1)
+    try:
+        t0 = time.perf_counter()
+        cid = mgr.submit(CampaignSpec(**spec))
+        state = mgr.wait(cid, timeout=1800)
+        campaign_wall = time.perf_counter() - t0
+        assert state == "done", mgr.status(cid).get("error")
+
+        eng = mgr.serving.engine_for("mcm2")
+        accel = make_accelerator("mcm2")
+        X = accel.sample_inputs(8, seed=1)
+        tiers = {}
+        for tier in TIERS:
+            r = eng.serve(X, tier=tier)
+            tiers[tier] = {
+                "genome": r["genome"],
+                "labels": r["labels"],
+                "measured_qor": float(r["qor"]),
+            }
+            emit(f"serving.campaign_tier.{tier}",
+                 r["latency_s"] * 1e6, f"qor={r['qor']:.1f}")
+        return {
+            "campaign_wall_s": campaign_wall,
+            "front_points": len(eng.catalog),
+            "tiers": tiers,
+        }
+    finally:
+        mgr.shutdown()
+
+
+def bench_throughput(n_requests: int) -> dict:
+    """gaussian3x3 mixed-tier storm: requests/sec + measured QoR per
+    operating tier over a 4-point catalog."""
+    from repro.core.acl.library import default_library
+    from repro.service.campaigns import make_accelerator
+    from repro.serving import ServingEngine
+
+    lib = default_library()
+    accel = make_accelerator("gaussian3x3")
+    cat = gauss_catalog(accel, lib)
+    eng = ServingEngine(accel, lib, catalog=cat, max_batch=16,
+                        max_wait_s=0.005)
+    try:
+        X = accel.sample_inputs(2, seed=2)
+        # warm the sim paths (fused plan compile etc.) off the clock
+        for tier in TIERS:
+            eng.serve(X, tier=tier)
+        slas = [dict(tier=TIERS[i % 3]) if i % 4 else
+                dict(budget={"energy": float(4 + (i % 7))})
+                for i in range(n_requests)]
+        t0 = time.perf_counter()
+        futs = [eng.submit(X, **sla) for sla in slas]
+        results = [f.result(timeout=600) for f in futs]
+        wall = time.perf_counter() - t0
+
+        st = eng.stats()
+        by_tier: dict = {}
+        for r in results:
+            key = r["tier"] or "budget"
+            by_tier.setdefault(key, []).append(float(r["qor"]))
+        per_tier_qor = {
+            k: {"n": len(v), "mean_qor": float(np.mean(v)),
+                "min_qor": float(np.min(v)), "max_qor": float(np.max(v))}
+            for k, v in sorted(by_tier.items())
+        }
+        distinct_points = len({tuple(r["genome"]) for r in results})
+        rps = n_requests / max(wall, 1e-9)
+        emit("serving.throughput", wall / n_requests * 1e6,
+             f"{rps:.1f} req/s")
+        emit("serving.batching", float(st["groups"]),
+             f"{n_requests / max(st['groups'], 1):.1f} req/group")
+        return {
+            "n_requests": n_requests,
+            "wall_s": wall,
+            "requests_per_s": rps,
+            "batches": st["batches"],
+            "groups": st["groups"],
+            "mean_group_size": n_requests / max(st["groups"], 1),
+            "front_points": len(cat),
+            "distinct_points_served": distinct_points,
+            "per_tier_qor": per_tier_qor,
+        }
+    finally:
+        eng.close()
+
+
+def bench_hot_swap(n_requests: int) -> dict:
+    """Improved front installed mid-stream: the in-flight workload
+    picks it up; requests pinned to the old version stay
+    byte-identical."""
+    from repro.core.acl.library import default_library
+    from repro.service.campaigns import make_accelerator
+    from repro.serving import FrontCatalog, ServingEngine
+
+    lib = default_library()
+    accel = make_accelerator("gaussian3x3")
+    cat1 = gauss_catalog(accel, lib, n_points=4)
+    eng = ServingEngine(accel, lib, catalog=cat1, max_batch=8,
+                        max_wait_s=0.002)
+    try:
+        X = accel.sample_inputs(2, seed=3)
+        baseline = eng.serve(X, tier="budget", return_outputs=True)
+        assert baseline["catalog_version"] == 1
+
+        # the "improved" front: drop the most aggressive point, so the
+        # budget tier moves to a higher-QoR genome
+        keep = cat1.points[:-1]
+        cat2 = FrontCatalog(
+            accel.name,
+            keep,
+            cat1.objectives,
+        )
+        half = n_requests // 2
+        futs = [eng.submit(X, tier="budget") for _ in range(half)]
+        v2 = eng.install(cat2)
+        futs += [eng.submit(X, tier="budget") for _ in range(half)]
+        results = [f.result(timeout=600) for f in futs]
+        versions = sorted({r["catalog_version"] for r in results})
+
+        # pinned to the pre-swap catalog: byte-identical output + QoR
+        pinned = eng.serve(X, tier="budget", pin_version=1,
+                           return_outputs=True)
+        byte_identical = (
+            pinned["genome"] == baseline["genome"]
+            and pinned["qor"] == baseline["qor"]
+            and np.array_equal(np.asarray(pinned["outputs"]),
+                               np.asarray(baseline["outputs"]))
+        )
+        post = eng.serve(X, tier="budget")
+        st = eng.stats()
+        emit("serving.hot_swap", float(st["hot_swaps"]),
+             f"pinned_byte_identical={byte_identical}")
+        assert v2 == 2 and post["catalog_version"] == 2
+        assert byte_identical, "pinned request diverged across hot-swap"
+        return {
+            "installed_version": v2,
+            "versions_served_in_stream": versions,
+            "old_budget_genome": baseline["genome"],
+            "new_budget_genome": post["genome"],
+            "old_qor": float(baseline["qor"]),
+            "new_qor": float(post["qor"]),
+            "pinned_byte_identical": bool(byte_identical),
+            "hot_swaps": st["hot_swaps"],
+            "served_by_version": st["served_by_version"],
+        }
+    finally:
+        eng.close()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI sizing: small campaign, short storm")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_serving.json"))
+    args = ap.parse_args()
+
+    spec = SMOKE_SPEC if args.smoke else CAMPAIGN_SPEC
+    n_storm = 24 if args.smoke else 200
+    report = {"smoke": bool(args.smoke)}
+
+    section("campaign -> front -> serving (mcm2)")
+    report["campaign"] = bench_campaign_front(spec)
+
+    section("continuous-batching throughput (gaussian3x3)")
+    report["throughput"] = bench_throughput(n_storm)
+    tq = report["throughput"]["per_tier_qor"]
+    assert len(tq) >= 3, f"expected >=3 tiers, got {sorted(tq)}"
+    # exact must measurably beat the budget tier on real QoR
+    assert tq["exact"]["mean_qor"] > tq["budget"]["mean_qor"], tq
+
+    section("hot-swap drill (improved front mid-stream)")
+    report["hot_swap"] = bench_hot_swap(n_storm // 2)
+
+    out_path = os.path.abspath(args.out)
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"wrote {out_path}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

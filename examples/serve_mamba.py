@@ -1,27 +1,97 @@
 """Serving example: batched greedy decoding from the attention-free
-falcon-mamba backbone (O(1) decode state — the long_500k family).
+falcon-mamba backbone (O(1) decode state — the long_500k family), with
+the approximation policy drawn from a stored Pareto front.
 
     PYTHONPATH=src python examples/serve_mamba.py
+    PYTHONPATH=src python examples/serve_mamba.py --front front.json \
+        --tier budget
+    PYTHONPATH=src python examples/serve_mamba.py --demo-front /tmp/f.json
+
+``--front`` loads a front JSON (the service's ``GET /front`` payload
+shape) and serves the chosen tier's genome as an ``ApproxPolicy``.
+``--demo-front`` writes a small synthetic front for this arch first
+(exact genome + two perturbed points) so the front->policy->decode path
+is exercisable without running an LM campaign — that is what CI does.
+
+REPRO_SMOKE=1 shrinks the workload for CI.
 """
 
+import argparse
+import json
 import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.configs import get_config
-from repro.launch.serve import serve_batch
+from repro.launch.serve import policy_from_front, serve_batch
 from repro.models import reduced
+
+SMOKE = os.environ.get("REPRO_SMOKE", "") not in ("", "0")
+
+
+def write_demo_front(cfg, path: str) -> None:
+    """A synthetic 3-point front for ``lm:<arch>``: the exact genome plus
+    two perturbed genomes with fabricated labels, in the minimization
+    convention front JSONs carry (qor negated).  Stands in for a real LM
+    campaign's front in smoke tests."""
+    from repro.accel.lm import LMAccelerator
+    from repro.core.acl.library import default_library
+
+    accel = LMAccelerator(cfg, use_reduced=False)
+    lib = default_library()
+    g0 = accel.exact_genome(lib)
+    n = len(lib.kind("mul8s"))
+    g1, g2 = g0.copy(), g0.copy()
+    g1[0] = (g1[0] + 1) % n
+    g2[:2] = (g2[:2] + 2) % n
+    front = {
+        "accel": accel.name,
+        "objectives": ["qor", "energy"],
+        "genomes": [g0.tolist(), g1.tolist(), g2.tolist()],
+        # [-qor, energy]: exact = capped PSNR at full cost
+        "front": [[-100.0, 10.0], [-72.0, 7.0], [-48.0, 4.0]],
+    }
+    with open(path, "w") as f:
+        json.dump(front, f, indent=1)
+    print(f"wrote demo front for {accel.name} -> {path}")
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--front", default=None,
+                    help="front JSON to draw the serving policy from")
+    ap.add_argument("--tier", default="balanced",
+                    choices=("exact", "balanced", "budget"))
+    ap.add_argument("--demo-front", default=None, metavar="PATH",
+                    help="write a synthetic front for this arch to PATH "
+                         "(if missing) and serve from it")
+    args = ap.parse_args()
+
     cfg = reduced(get_config("falcon-mamba-7b"))
     print(f"serving {cfg.name}: layers={cfg.n_layers} d={cfg.d_model} "
           f"(attention-free: decode state is O(1) in context length)")
-    tokens, tps = serve_batch(cfg, batch=4, prompt_len=32, gen=24)
+
+    front_path = args.front
+    if args.demo_front:
+        front_path = args.demo_front
+        if not os.path.exists(front_path):
+            write_demo_front(cfg, front_path)
+    policy = None
+    if front_path:
+        policy, sel = policy_from_front(cfg, front_path, args.tier)
+        labels = " ".join(
+            f"{k}={v:.3g}" for k, v in sel.point.labels.items())
+        print(f"tier={args.tier}: genome={list(sel.point.genome)} "
+              f"({labels}) -> {len(policy.assignments)} approximated "
+              f"projection classes")
+
+    batch, prompt_len, gen = (2, 16, 8) if SMOKE else (4, 32, 24)
+    tokens, tps = serve_batch(
+        cfg, batch=batch, prompt_len=prompt_len, gen=gen, policy=policy)
     print(f"generated {tokens.shape[0]}x{tokens.shape[1]} tokens "
           f"@ {tps:.1f} tok/s (CPU, reduced config)")
-    print("sample:", tokens[0, -24:].tolist())
+    print("sample:", tokens[0, -gen:].tolist())
 
 
 if __name__ == "__main__":

@@ -1,0 +1,88 @@
+"""Serving-tier quickstart: search, then serve the front.
+
+    PYTHONPATH=src python examples/serving_quickstart.py
+
+Runs one mcm2 campaign, then serves inference requests off the
+resulting Pareto front through the continuous-batching serving engine:
+named tiers (exact / balanced / budget), per-request SLA budgets with
+nearest-feasible degrade, and a live hot-swap — a second campaign
+completes mid-stream and the engine picks up the refreshed front
+without dropping a request.
+
+Set REPRO_SMOKE=1 for the CI-sized fast mode."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.service import CampaignManager, CampaignSpec, make_accelerator
+
+SMOKE = bool(os.environ.get("REPRO_SMOKE"))
+
+SPEC = dict(accel="mcm2",
+            n_train=10 if SMOKE else 48, n_qor_samples=2,
+            pop_size=8 if SMOKE else 16,
+            n_parents=4 if SMOKE else 8,
+            n_generations=2 if SMOKE else 4)
+
+
+def main():
+    mgr = CampaignManager(eval_workers=2, campaign_workers=2)
+
+    print("-- search: one mcm2 campaign --")
+    cid = mgr.submit(CampaignSpec(**SPEC))
+    state = mgr.wait(cid, timeout=1800)
+    print(f"campaign {cid}: {state}")
+
+    print("\n-- serve: the front as a product --")
+    # the hub snapshots the merged global front into a FrontCatalog and
+    # materializes the named operating tiers
+    engine = mgr.serving.engine_for("mcm2")
+    cat = engine.catalog
+    print(f"catalog v{cat.version}: {len(cat)} operating points")
+    for name, i in sorted(cat.tiers.items()):
+        p = cat.points[i]
+        labels = " ".join(f"{k}={v:.3g}" for k, v in p.labels.items())
+        print(f"  tier {name:<9} genome={list(p.genome)} ({labels})")
+
+    accel = make_accelerator("mcm2")
+    X = accel.sample_inputs(4, seed=1)
+    for tier in ("exact", "balanced", "budget"):
+        r = engine.serve(X, tier=tier)
+        print(f"  serve tier={tier:<9} measured qor={r['qor']:.1f} dB "
+              f"(batch group of {r['group_size']})")
+
+    # per-request SLA: a budget instead of a named tier
+    emax = cat.points[cat.tiers["budget"]].labels["energy"]
+    r = engine.serve(X, budget={"energy": emax + 1.0})
+    print(f"  serve budget(energy<={emax + 1.0:.3g}): "
+          f"genome={r['genome']} feasible={r['feasible']}")
+    r = engine.serve(X, budget={"qor": 1e6})  # impossible: degrade
+    print(f"  serve budget(qor>=1e6): nearest-feasible degrade -> "
+          f"qor={r['labels']['qor']:.1f} feasible={r['feasible']}")
+
+    print("\n-- hot-swap: search while serving --")
+    # the hub subscribed to the manager: when this campaign finishes,
+    # the engine's catalog refreshes between batches automatically
+    v0 = engine.catalog.version
+    cid2 = mgr.submit(CampaignSpec(**dict(SPEC, seed=1)))
+    mgr.wait(cid2, timeout=1800)
+    r = engine.serve(X, tier="budget")
+    cat = engine.catalog
+    swapped = cat.version > v0
+    print(f"second campaign done: catalog v{v0} -> v{cat.version} "
+          f"({'hot-swapped' if swapped else 'front unchanged, no swap'})")
+    print(f"  serve tier=budget now: v{r['catalog_version']} "
+          f"qor={r['qor']:.1f}")
+
+    s = mgr.serving_stats()["engines"]["mcm2"]
+    print(f"\nserving stats: {s['responses']} responses in "
+          f"{s['batches']} batches / {s['groups']} groups, "
+          f"tier selections {s['tier_selections']}, "
+          f"{s['hot_swaps']} hot-swaps")
+    mgr.shutdown()
+
+
+if __name__ == "__main__":
+    main()

@@ -102,6 +102,33 @@ class LMAccelerator(Accelerator):
                 assignments[slot.name] = (c.name, r)
         return ApproxPolicy(assignments)
 
+    def policy_for_genome(
+        self,
+        genome,
+        library=None,
+        *,
+        rank_genes: bool = False,
+    ) -> ApproxPolicy:
+        """Decode one front genome to the ``ApproxPolicy`` the serving
+        tier (and ``launch.serve --front``) feeds into the jitted
+        prefill/decode steps.  This is the bridge from a stored Pareto
+        point to a runnable model configuration."""
+        if library is None:
+            from ..core.acl.library import default_library
+
+            library = default_library()
+        genome = np.asarray(genome, dtype=np.int64).reshape(-1)
+        width = len(self.slots) + (
+            len(self.mul_slot_indices()) if rank_genes else 0
+        )
+        if len(genome) != width:
+            raise ValueError(
+                f"genome has {len(genome)} genes; {self.name} expects "
+                f"{width} (rank_genes={rank_genes})"
+            )
+        circuits, ranks = self.decode(genome, library, rank_genes=rank_genes)
+        return self._policy(circuits, ranks)
+
     def _forward(self, policy: Optional[ApproxPolicy], inputs: np.ndarray) -> np.ndarray:
         import jax.numpy as jnp
 

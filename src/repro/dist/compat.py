@@ -37,11 +37,15 @@ def make_mesh(shape: Tuple[int, ...], axes: Sequence[str]):
 
 def mesh_context(mesh):
     """Context manager making ``mesh`` ambient: ``jax.set_mesh`` on new
-    jax, the legacy ``with mesh:`` resource context otherwise."""
+    jax, ``jax.sharding.use_mesh`` on the transitional releases that
+    shipped it first, the legacy ``with mesh:`` resource context
+    otherwise."""
     import jax
 
     if hasattr(jax, "set_mesh"):
         return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
     return mesh  # Mesh is itself a context manager on older jax
 
 

@@ -3,12 +3,17 @@ at reduced scale.
 
     PYTHONPATH=src python -m repro.launch.serve --arch falcon-mamba-7b \
         --reduced --batch 4 --prompt-len 32 --gen 16
+
+The approximate-serving path draws its policy from a stored Pareto
+front instead of a hand-picked circuit: ``--front front.json --tier
+budget`` loads the front (the ``GET /front`` payload shape, or a
+``FrontCatalog.to_json`` file), resolves the tier to a genome, and
+decodes it to the ``ApproxPolicy`` baked into the jitted steps.
 """
 
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -16,10 +21,10 @@ import jax.numpy as jnp
 from ..configs import get_config
 from ..models import ApproxPolicy, reduced
 from ..models.common import init_tree
-from ..models.transformer import cache_specs, param_specs
-from ..train.serve import make_decode_step, make_prefill_step
+from ..models.transformer import param_specs
+from ..train.serve import Generator
 
-__all__ = ["serve_batch", "main"]
+__all__ = ["serve_batch", "policy_from_front", "main"]
 
 
 def serve_batch(
@@ -30,50 +35,39 @@ def serve_batch(
     gen: int = 16,
     policy: ApproxPolicy | None = None,
     seed: int = 0,
+    params=None,
+    prompts=None,
 ):
-    """Greedy-decode `gen` tokens for a batch of synthetic prompts.
-    Returns (tokens (b, prompt+gen), tokens/s)."""
+    """Greedy-decode `gen` tokens for a batch of (synthetic by default)
+    prompts.  Returns (tokens (b, prompt+gen), tokens/s)."""
     key = jax.random.PRNGKey(seed)
-    params = init_tree(param_specs(cfg), key)
-    vis = cfg.frontend_len if cfg.frontend == "vision" else 0
-    max_len = prompt_len + gen + vis
-    enc_len = 16 if cfg.is_encoder_decoder else 0
-    caches = init_tree(cache_specs(cfg, batch, max_len, enc_len=enc_len), key)
+    if params is None:
+        params = init_tree(param_specs(cfg), key)
+    if prompts is None:
+        prompts = jax.random.randint(
+            key, (batch, prompt_len), 0, cfg.vocab_size)
+    prompts = jnp.asarray(prompts, jnp.int32)
+    g = Generator(cfg, policy=policy, attn_chunk=32, scan_chunk=8)
+    return g.generate(params, prompts, gen, key=key)
 
-    prompts = jax.random.randint(key, (batch, prompt_len), 0, cfg.vocab_size)
-    batch_in = {"tokens": prompts}
-    if cfg.is_encoder_decoder:
-        batch_in["enc_embeds"] = jax.random.normal(
-            key, (batch, enc_len, cfg.d_model), jnp.float32) * 0.1
-    if cfg.frontend == "vision":
-        batch_in["embeds"] = jax.random.normal(
-            key, (batch, cfg.frontend_len, cfg.d_model), jnp.float32) * 0.1
 
-    prefill = jax.jit(make_prefill_step(cfg, policy=policy, attn_chunk=32,
-                                        scan_chunk=8))
-    decode = jax.jit(make_decode_step(cfg, policy=policy))
+def policy_from_front(cfg, front_path: str, tier: str = "balanced"):
+    """(policy, selection) for ``tier`` of the stored front at
+    ``front_path`` — the CLI's bridge from a DSE campaign's output to a
+    runnable serving configuration."""
+    from ..accel.lm import LMAccelerator
+    from ..serving import FrontCatalog
 
-    # NOTE: prefill writes K/V at positions [0, prompt_len) of the cache
-    out = prefill(params, batch_in, caches)
-    enc_out = None
-    if cfg.is_encoder_decoder:
-        logits, caches, enc_out = out
-    else:
-        logits, caches = out
-    nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-
-    toks = [prompts, nxt]
-    pos0 = prompt_len + (cfg.frontend_len if cfg.frontend == "vision" else 0)
-    t0 = time.perf_counter()
-    for i in range(gen - 1):
-        nxt, logits, caches = decode(
-            params, caches, nxt, jnp.int32(pos0 + i), enc_out=enc_out
-        )
-        toks.append(nxt)
-    dt = time.perf_counter() - t0
-    tokens = jnp.concatenate(toks, axis=1)
-    tps = batch * (gen - 1) / max(dt, 1e-9)
-    return tokens, tps
+    cat = FrontCatalog.from_file(front_path)
+    expect = f"lm:{cfg.name}"
+    if cat.accel != expect:
+        print(f"[serve] WARNING: front is for {cat.accel!r}, "
+              f"serving {expect!r}")
+    sel = cat.select(tier=tier)
+    accel = LMAccelerator(cfg, use_reduced=False)
+    policy = accel.policy_for_genome(
+        sel.point.genome_array(), rank_genes=cat.rank_genes)
+    return policy, sel
 
 
 def main():
@@ -83,14 +77,28 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--approx", default=None)
+    ap.add_argument("--approx", default=None,
+                    help="hand-picked circuit for ffn_in/ffn_out")
+    ap.add_argument("--front", default=None,
+                    help="stored front JSON (GET /front shape); the "
+                         "policy comes from its --tier operating point")
+    ap.add_argument("--tier", default="balanced",
+                    choices=("exact", "balanced", "budget"))
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
     policy = None
-    if args.approx:
+    if args.front and args.approx:
+        ap.error("--front and --approx are mutually exclusive")
+    if args.front:
+        policy, sel = policy_from_front(cfg, args.front, args.tier)
+        labels = " ".join(
+            f"{k}={v:.3g}" for k, v in sel.point.labels.items())
+        print(f"[serve] tier={args.tier} genome={list(sel.point.genome)} "
+              f"({labels})")
+    elif args.approx:
         policy = ApproxPolicy({
             "ffn_in": (args.approx, None), "ffn_out": (args.approx, None),
         })

@@ -42,6 +42,21 @@ Endpoints (JSON in/out):
                                     same counters /stats renders as JSON
                                     (scheduler, labeler, store, synth,
                                     fleet, worker instruments)
+    POST /serve                  {"accel": <name>, "inputs": [...],
+                                  "tier": "exact|balanced|budget" |
+                                  "budget": {"energy": <=x, "qor": >=y} |
+                                  "pin_version": <n>, "gen": <lm tokens>}
+                                 -> one inference through the serving
+                                    tier: the accelerator's engine picks
+                                    the operating point off the merged
+                                    front (409 until some campaign has
+                                    produced one), batches concurrent
+                                    requests per point, and returns the
+                                    result + genome/labels/catalog
+                                    version it served at
+    GET  /serving/stats          -> per-engine serving counters
+                                    (requests, tier selections, hot
+                                    swaps, queue depth, catalog tiers)
     GET  /healthz                -> {"ok": true}
 
 With ``--eval-backend fleet`` the embedded orchestrator's worker
@@ -132,6 +147,8 @@ class _Handler(BaseHTTPRequestHandler):
                 return self._send({"strategies": available_strategies()})
             if path == "/stats":
                 return self._send(mgr.stats())
+            if path == "/serving/stats":
+                return self._send(mgr.serving_stats())
             if path == "/fleet/stats":
                 fleet = getattr(mgr.scheduler, "fleet", None)
                 if fleet is None:
@@ -183,6 +200,47 @@ class _Handler(BaseHTTPRequestHandler):
                 return self._send(obj, code)
             except (json.JSONDecodeError, TypeError, ValueError) as exc:
                 return self._error(400, f"bad fleet payload: {exc}")
+            except Exception as exc:  # noqa: BLE001 - JSON 500
+                return self._error(500, f"{type(exc).__name__}: {exc}")
+        if path == "/serve":
+            try:
+                n = int(self.headers.get("Content-Length", 0))
+                payload = json.loads(self.rfile.read(n) or b"{}")
+                if not isinstance(payload, dict):
+                    raise ValueError("serve payload must be a JSON object")
+                accel = payload.get("accel")
+                if not accel:
+                    raise ValueError('missing "accel"')
+                if "inputs" not in payload:
+                    raise ValueError('missing "inputs"')
+                import numpy as np
+
+                from ..serving import EmptyFrontError, NoFrontError
+
+                objectives = (tuple(payload["objectives"])
+                              if payload.get("objectives") else None)
+                try:
+                    with obs.span("serving.http", accel=accel):
+                        eng = self.manager.serving.engine_for(
+                            accel, objectives,
+                            rank_genes=bool(payload.get("rank_genes")),
+                        )
+                        result = eng.serve(
+                            np.asarray(payload["inputs"]),
+                            tier=payload.get("tier"),
+                            budget=payload.get("budget"),
+                            pin_version=payload.get("pin_version"),
+                            gen=payload.get("gen"),
+                            return_outputs=bool(
+                                payload.get("return_outputs")),
+                        )
+                except (NoFrontError, EmptyFrontError) as exc:
+                    # no completed campaign has produced a front yet:
+                    # a state conflict, not a malformed request
+                    return self._error(409, str(exc))
+                return self._send(result)
+            except (json.JSONDecodeError, TypeError, ValueError) as exc:
+                return self._error(400, f"bad serve request: {exc}")
             except Exception as exc:  # noqa: BLE001 - JSON 500
                 return self._error(500, f"{type(exc).__name__}: {exc}")
         m = re.fullmatch(r"/campaigns/([\w-]+)/(cancel|resume)", path)
@@ -314,6 +372,20 @@ class Client:
 
     def stats(self) -> Dict:
         return self._req("/stats")
+
+    def serve(self, accel: str, inputs, **kw) -> Dict:
+        """One inference through the serving tier.  ``inputs`` is a
+        batch of accelerator inputs (or an LM prompt token list);
+        keywords pass through: tier=, budget=, pin_version=, gen=,
+        return_outputs=, objectives=, rank_genes=."""
+        import numpy as np
+
+        if isinstance(inputs, np.ndarray):
+            inputs = inputs.tolist()
+        return self._req("/serve", {"accel": accel, "inputs": inputs, **kw})
+
+    def serving_stats(self) -> Dict:
+        return self._req("/serving/stats")
 
     def wait(self, cid: str, timeout: float = 600.0, poll: float = 0.25) -> Dict:
         import time

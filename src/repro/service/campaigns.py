@@ -541,6 +541,13 @@ class CampaignManager:
         self._snap_lines = 0
         if snapshot_path:
             self._replay_snapshots(snapshot_path)
+        # serving tier: front-update listeners (ServingEngine.attach /
+        # ServingHub) fire whenever a campaign completes, so an engine
+        # serving an accelerator hot-swaps in the improved front; the
+        # hub itself is created lazily on first POST /serve
+        self._front_listeners: List = []
+        self._serving = None
+        self._serving_lock = threading.Lock()
 
     # ------------------------------------------------------------------
     def _admit(self, spec, kind: str) -> _Campaign:
@@ -662,6 +669,7 @@ class CampaignManager:
                       c.steps, c.finished_at - (c.started_at or c.finished_at))
             c.done_evt.set()
             self._evict()
+            self._notify_front(c.spec.accel)
         else:
             self._enqueue(c)
 
@@ -883,6 +891,8 @@ class CampaignManager:
             c.finished_at = time.time()
             c.done_evt.set()
             self._evict()
+            if c.state == "done":
+                self._notify_front(c.spec.accel)
 
     def _evict(self) -> None:
         """Bound retention: compact old finished campaigns to their
@@ -1046,6 +1056,45 @@ class CampaignManager:
             "campaigns": sorted({s for s, m in zip(src, mask) if m}),
         }
 
+    # ------------------------------------------------------------------
+    # serving tier
+    # ------------------------------------------------------------------
+    def subscribe_front(self, callback) -> None:
+        """Register ``callback(accel_name)`` to fire after a campaign
+        completes successfully — the serving tier's hot-swap signal."""
+        with self._lock:
+            self._front_listeners.append(callback)
+
+    def _notify_front(self, accel: str) -> None:
+        """Fire front listeners OUTSIDE the manager lock (a listener
+        rebuilds a catalog via global_front, which takes it).  Listener
+        failures never fail the campaign that triggered them."""
+        with self._lock:
+            listeners = list(self._front_listeners)
+        for cb in listeners:
+            try:
+                cb(accel)
+            except Exception:  # noqa: BLE001 - campaign isolation
+                _log.exception("front listener failed for %s", accel)
+
+    @property
+    def serving(self):
+        """The lazily-created ServingHub (one engine per accelerator)
+        behind POST /serve.  Uses a dedicated lock: a serving request
+        arriving while a campaign ticks must not contend on _lock."""
+        with self._serving_lock:
+            if self._serving is None:
+                from ..serving import ServingHub
+
+                self._serving = ServingHub(self)
+            return self._serving
+
+    def serving_stats(self) -> Dict:
+        """GET /serving/stats without forcing the hub into existence."""
+        with self._serving_lock:
+            hub = self._serving
+        return hub.stats() if hub is not None else {"engines": {}}
+
     def stats(self) -> Dict:
         """The service's whole labeling economy in one JSON blob: label-
         store hits, in-flight dedup hits, coalesced batches (scheduler);
@@ -1063,7 +1112,7 @@ class CampaignManager:
                 by_state[c.state] = by_state.get(c.state, 0) + 1
         cache = (self.synth_cache if self.synth_cache is not None
                  else synth_mod.shared_synth_cache())
-        return {
+        out = {
             "campaigns": by_state,
             "scheduler": self.scheduler.stats(),
             "surrogates": self.registry.stats(),
@@ -1083,8 +1132,17 @@ class CampaignManager:
                 "timeline_campaigns": len(self.timeline.campaigns()),
             },
         }
+        with self._serving_lock:
+            hub = self._serving
+        if hub is not None:
+            out["serving"] = hub.stats()
+        return out
 
     def shutdown(self, *, wait: bool = True) -> None:
+        with self._serving_lock:
+            hub, self._serving = self._serving, None
+        if hub is not None:
+            hub.close()
         self._hier_pool.shutdown(wait=wait)
         self._pool.shutdown(wait=wait)
         self.scheduler.shutdown(wait=wait)

@@ -1,0 +1,431 @@
+"""Serving tier: FrontCatalog tiers + SLA selector edge cases, the
+continuous-batching ServingEngine (grouping, measured QoR, hot-swap
+atomicity + version pinning under concurrent traffic), the manager's
+front-update subscription, and POST /serve over HTTP."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.acl.library import default_library
+from repro.serving import (
+    EmptyFrontError,
+    FrontCatalog,
+    NoFrontError,
+    OperatingPoint,
+    ServingEngine,
+)
+from repro.service.campaigns import CampaignManager, CampaignSpec, make_accelerator
+
+SMALL = dict(n_train=10, n_qor_samples=2, pop_size=8, n_parents=4,
+             n_generations=2)
+
+
+def _cat(rows, accel="toy", objectives=("qor", "energy"), **kw):
+    """rows: [(genome tuple, qor, energy)] with RAW qor (higher better);
+    builds via from_front, so qor goes through the stored minimization
+    convention (negated) and back."""
+    genomes = [list(g) for g, _, _ in rows]
+    front = [[-q, e] for _, q, e in rows]
+    return FrontCatalog.from_front(accel, genomes, front, objectives, **kw)
+
+
+# ---------------------------------------------------------------------------
+# catalog: construction, tiers, signs
+# ---------------------------------------------------------------------------
+
+def test_front_sign_convention_roundtrip():
+    cat = _cat([((0, 1), 80.0, 5.0), ((2, 3), 40.0, 2.0)])
+    # labels are raw: qor back to higher-is-better
+    assert cat.points[0].labels == {"qor": 80.0, "energy": 5.0}
+    d = cat.to_json()
+    # the emitted front rows are minimization-convention again
+    assert d["front"][0] == [-80.0, 5.0]
+    again = FrontCatalog.from_json(d)
+    assert [p.labels for p in again.points] == [p.labels for p in cat.points]
+    assert again.digest == cat.digest
+
+
+def test_tiers_exact_balanced_budget():
+    cat = _cat([
+        ((0,), 95.0, 10.0),   # best qor -> exact
+        ((1,), 70.0, 4.0),    # knee -> balanced
+        ((2,), 40.0, 3.5),    # cheapest -> budget
+    ])
+    assert cat.tiers["exact"] == 0
+    assert cat.points[cat.tiers["budget"]].labels["energy"] == 3.5
+    assert cat.points[cat.tiers["balanced"]].labels["qor"] == 70.0
+
+
+def test_empty_front_raises():
+    cat = FrontCatalog("toy", [])
+    assert cat.empty and len(cat) == 0 and cat.tiers == {}
+    with pytest.raises(EmptyFrontError):
+        cat.select(tier="exact")
+    # an empty /front payload builds an empty catalog (not a shape error)
+    empty = FrontCatalog.from_front("toy", [], [])
+    assert empty.empty
+
+
+def test_single_point_front_everything_maps_to_it():
+    cat = _cat([((3, 1), 60.0, 4.0)])
+    for tier in ("exact", "balanced", "budget"):
+        sel = cat.select(tier=tier)
+        assert sel.index == 0 and sel.point.genome == (3, 1)
+    ok = cat.select(budget={"energy": 10.0})
+    assert ok.feasible and ok.index == 0
+    degraded = cat.select(budget={"energy": 1.0})
+    assert not degraded.feasible and degraded.index == 0
+
+
+def test_selector_validation():
+    cat = _cat([((0,), 50.0, 1.0)])
+    with pytest.raises(ValueError, match="not both"):
+        cat.select(tier="exact", budget={"energy": 1.0})
+    with pytest.raises(ValueError, match="unknown tier"):
+        cat.select(tier="turbo")
+    with pytest.raises(ValueError, match="unknown budget objective"):
+        cat.select(budget={"latency": 1.0})
+    with pytest.raises(ValueError, match="empty"):
+        cat.select(budget={})
+    # default is the balanced tier
+    assert cat.select().tier == "balanced"
+
+
+def test_budget_semantics_qor_is_lower_bound():
+    cat = _cat([((0,), 90.0, 9.0), ((1,), 50.0, 3.0)])
+    # qor >= 80 forces the expensive point even though it costs more
+    sel = cat.select(budget={"qor": 80.0})
+    assert sel.feasible and sel.point.labels["qor"] == 90.0
+    # energy <= 5 forces the cheap point
+    sel = cat.select(budget={"energy": 5.0})
+    assert sel.feasible and sel.point.labels["energy"] == 3.0
+    # jointly infeasible -> nearest-feasible degrade, deterministic
+    sel = cat.select(budget={"qor": 80.0, "energy": 5.0})
+    assert not sel.feasible
+    sel2 = cat.select(budget={"qor": 80.0, "energy": 5.0})
+    assert sel.index == sel2.index
+
+
+def test_infeasible_degrades_to_minimal_violation():
+    cat = _cat([((0,), 90.0, 9.0), ((1,), 70.0, 5.0), ((2,), 30.0, 1.0)])
+    # energy <= 0.5: every point violates; (2,) violates least
+    sel = cat.select(budget={"energy": 0.5})
+    assert not sel.feasible and sel.point.genome == (2,)
+    # qor >= 99: (0,) violates least
+    sel = cat.select(budget={"qor": 99.0})
+    assert not sel.feasible and sel.point.genome == (0,)
+
+
+def test_deterministic_tie_breaking_on_identical_labels():
+    # two genomes with identical objectives: canonical order ties on
+    # genome bytes, so (1, 9) beats (2, 0) everywhere, every time
+    rows = [((2, 0), 60.0, 4.0), ((1, 9), 60.0, 4.0)]
+    for perm in (rows, rows[::-1]):
+        cat = _cat(perm)
+        assert cat.points[0].genome == (1, 9)
+        assert cat.select(tier="exact").point.genome == (1, 9)
+        assert cat.select(budget={"energy": 5.0}).point.genome == (1, 9)
+        assert cat.select(budget={"energy": 0.1}).point.genome == (1, 9)
+
+
+def test_missing_objective_label_rejected():
+    with pytest.raises(ValueError, match="lacks objective"):
+        FrontCatalog("toy", [OperatingPoint((0,), {"qor": 1.0})],
+                     ("qor", "energy"))
+    with pytest.raises(ValueError, match="columns"):
+        FrontCatalog.from_front("toy", [[0]], [[1.0]], ("qor", "energy"))
+
+
+# ---------------------------------------------------------------------------
+# engine: batching, measured QoR, hot-swap
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def gauss():
+    accel = make_accelerator("gaussian3x3")
+    lib = default_library()
+    g_exact = accel.exact_genome(lib)
+    g_cheap = g_exact.copy()
+    # a genuinely approximate variant: non-exact circuit in every slot
+    for i in range(9):
+        g_cheap[i] = (g_cheap[i] + 1) % len(lib.kind("mul8u"))
+    return accel, lib, g_exact, g_cheap
+
+
+def _gauss_cat(accel, g_exact, g_cheap, qor_cheap=40.0):
+    return _cat([
+        (tuple(int(v) for v in g_exact), 100.0, 10.0),
+        (tuple(int(v) for v in g_cheap), qor_cheap, 3.0),
+    ], accel=accel.name)
+
+
+def test_engine_serves_tiers_with_measured_qor(gauss):
+    accel, lib, g_exact, g_cheap = gauss
+    eng = ServingEngine(accel, lib,
+                        catalog=_gauss_cat(accel, g_exact, g_cheap))
+    try:
+        X = accel.sample_inputs(2, seed=0)
+        r_exact = eng.serve(X, tier="exact")
+        r_budget = eng.serve(X, tier="budget")
+        # exact genome reproduces the exact output: capped PSNR
+        assert r_exact["qor"] == pytest.approx(100.0)
+        assert r_exact["genome"] == [int(v) for v in g_exact]
+        # the approximate point's MEASURED qor is finite and lower
+        assert r_budget["qor"] < r_exact["qor"]
+        assert r_budget["genome"] == [int(v) for v in g_cheap]
+        st = eng.stats()
+        assert st["responses"] == 2 and st["errors"] == 0
+        assert st["catalog"]["points"] == 2
+    finally:
+        eng.close()
+
+
+def test_engine_batches_same_point_into_one_group(gauss):
+    accel, lib, g_exact, g_cheap = gauss
+    eng = ServingEngine(accel, lib, max_batch=8, max_wait_s=0.2,
+                        catalog=_gauss_cat(accel, g_exact, g_cheap))
+    try:
+        X = accel.sample_inputs(2, seed=1)
+        futs = [eng.submit(X, tier="budget") for _ in range(4)]
+        results = [f.result(timeout=120) for f in futs]
+        assert {r["batch"] for r in results} == {results[0]["batch"]}
+        assert all(r["group_size"] == 4 for r in results)
+        assert eng.stats()["groups"] == 1
+    finally:
+        eng.close()
+
+
+def test_engine_coerces_wire_float_inputs(gauss):
+    """JSON payloads arrive float64; integer-operand accelerators must
+    serve integral floats identically to native ints and reject
+    non-integral values with a clean ValueError (HTTP 400), not a deep
+    gather IndexError."""
+    accel, lib, g_exact, g_cheap = gauss
+    eng = ServingEngine(accel, lib,
+                        catalog=_gauss_cat(accel, g_exact, g_cheap))
+    try:
+        X = accel.sample_inputs(2, seed=7)
+        as_int = eng.serve(X, tier="budget", return_outputs=True)
+        as_float = eng.serve(X.astype(np.float64), tier="budget",
+                             return_outputs=True)
+        assert as_float["qor"] == as_int["qor"]
+        assert as_float["outputs"] == as_int["outputs"]
+        with pytest.raises(ValueError, match="integer operands"):
+            eng.serve(X + 0.5, tier="budget")
+    finally:
+        eng.close()
+
+
+def test_engine_error_isolation(gauss):
+    accel, lib, g_exact, g_cheap = gauss
+    eng = ServingEngine(accel, lib,
+                        catalog=_gauss_cat(accel, g_exact, g_cheap))
+    try:
+        X = accel.sample_inputs(1, seed=2)
+        bad = eng.submit(X, tier="turbo")
+        pinned = eng.submit(X, tier="exact", pin_version=999)
+        good = eng.submit(X, tier="exact")
+        with pytest.raises(ValueError, match="unknown tier"):
+            bad.result(timeout=120)
+        with pytest.raises(ValueError, match="unknown catalog version"):
+            pinned.result(timeout=120)
+        assert good.result(timeout=120)["qor"] == pytest.approx(100.0)
+    finally:
+        eng.close()
+
+
+def test_hot_swap_and_version_pinning_byte_identical(gauss):
+    accel, lib, g_exact, g_cheap = gauss
+    cat1 = _gauss_cat(accel, g_exact, g_cheap, qor_cheap=40.0)
+    eng = ServingEngine(accel, lib, catalog=cat1)
+    try:
+        X = accel.sample_inputs(2, seed=3)
+        before = eng.serve(X, tier="budget", return_outputs=True)
+        assert before["catalog_version"] == 1
+
+        # the "improved" front drops the cheap point: budget moves
+        cat2 = _cat([(tuple(int(v) for v in g_exact), 100.0, 10.0)],
+                    accel=accel.name)
+        assert eng.install(cat2) == 2
+        # reinstalling identical content is a no-op (digest match)
+        assert eng.install(_cat(
+            [(tuple(int(v) for v in g_exact), 100.0, 10.0)],
+            accel=accel.name)) is None
+
+        after = eng.serve(X, tier="budget", return_outputs=True)
+        assert after["catalog_version"] == 2
+        assert after["genome"] == [int(v) for v in g_exact]
+
+        # requests pinned to v1 still serve the OLD genome with
+        # byte-identical outputs
+        pinned = eng.serve(X, tier="budget", pin_version=1,
+                           return_outputs=True)
+        assert pinned["catalog_version"] == 1
+        assert pinned["genome"] == before["genome"]
+        assert np.array_equal(np.asarray(pinned["outputs"]),
+                              np.asarray(before["outputs"]))
+        assert eng.stats()["hot_swaps"] == 1
+    finally:
+        eng.close()
+
+
+def test_hot_swap_atomicity_under_concurrent_traffic(gauss):
+    """Swap catalogs while requests are in flight: every response must
+    be internally consistent (its genome matches its reported catalog
+    version) and none may error or hang."""
+    accel, lib, g_exact, g_cheap = gauss
+    cat1 = _gauss_cat(accel, g_exact, g_cheap)
+    eng = ServingEngine(accel, lib, catalog=cat1, max_batch=4,
+                        max_wait_s=0.002)
+    version_genome = {1: [int(v) for v in g_cheap]}
+    try:
+        X = accel.sample_inputs(1, seed=4)
+        stop = threading.Event()
+        futs = []
+
+        def swapper():
+            flip = 0
+            while not stop.is_set():
+                flip += 1
+                # alternate which point is cheapest so the budget tier
+                # flips genome with each successful install
+                q = 40.0 if flip % 2 else 100.0
+                cat = _cat([
+                    (tuple(int(v) for v in g_exact), 100.0,
+                     10.0 if flip % 2 else 3.0),
+                    (tuple(int(v) for v in g_cheap), q, 3.0
+                     if flip % 2 else 10.0),
+                ], accel=accel.name)
+                v = eng.install(cat)
+                if v is not None:
+                    budget_i = cat.tiers["budget"]
+                    version_genome[v] = list(cat.points[budget_i].genome)
+                time.sleep(0.001)
+
+        sw = threading.Thread(target=swapper)
+        sw.start()
+        for _ in range(40):
+            futs.append(eng.submit(X, tier="budget"))
+        results = [f.result(timeout=180) for f in futs]
+        stop.set()
+        sw.join(timeout=10)
+        for r in results:
+            assert r["genome"] == version_genome[r["catalog_version"]], r
+        st = eng.stats()
+        assert st["errors"] == 0 and st["responses"] == 40
+        assert st["hot_swaps"] >= 1
+    finally:
+        eng.close()
+
+
+# ---------------------------------------------------------------------------
+# manager integration + HTTP
+# ---------------------------------------------------------------------------
+
+def test_manager_front_subscription_and_serving_flow():
+    mgr = CampaignManager()
+    fired = []
+    mgr.subscribe_front(fired.append)
+    try:
+        cid = mgr.submit(CampaignSpec(accel="mcm2", **SMALL))
+        assert mgr.wait(cid, timeout=300) == "done"
+        assert "mcm2" in fired
+
+        with pytest.raises(NoFrontError):
+            mgr.serving.engine_for("mcm1")
+
+        eng = mgr.serving.engine_for("mcm2")
+        accel = make_accelerator("mcm2")
+        X = accel.sample_inputs(4, seed=1)
+        r = eng.serve(X, tier="exact")
+        assert r["accel"] == "mcm2" and np.isfinite(r["qor"])
+        # the engine served off the manager's merged global front
+        gf = mgr.global_front("mcm2", ("qor", "energy"))
+        assert len(eng.catalog) == len(gf["genomes"])
+
+        # a second completed campaign fires the subscription again and
+        # the hub refreshes the engine (same front -> same version)
+        v_before = eng.catalog.version
+        cid2 = mgr.submit(CampaignSpec(accel="mcm2", **SMALL))
+        assert mgr.wait(cid2, timeout=300) == "done"
+        assert fired.count("mcm2") >= 2
+        assert eng.catalog.version >= v_before
+
+        stats = mgr.stats()
+        assert "mcm2" in stats["serving"]["engines"]
+        assert mgr.serving_stats()["engines"]["mcm2"]["responses"] >= 1
+    finally:
+        mgr.shutdown()
+
+
+def test_http_serve_endpoint():
+    from repro.service.api import Client, make_server
+
+    mgr = CampaignManager()
+    srv = make_server(mgr, port=0)
+    threading.Thread(target=srv.serve_forever, daemon=True).start()
+    cli = Client(f"http://127.0.0.1:{srv.server_address[1]}")
+    try:
+        # serving before any front exists is a 409 conflict
+        with pytest.raises(Exception, match="409"):
+            cli.serve("mcm2", [[1, 2]], tier="exact")
+
+        cid = cli.submit(accel="mcm2", **SMALL)
+        assert cli.wait(cid, timeout=300)["state"] == "done"
+
+        accel = make_accelerator("mcm2")
+        X = accel.sample_inputs(4, seed=2)
+        r = cli.serve("mcm2", X, tier="budget")
+        assert r["tier"] == "budget" and r["catalog_version"] == 1
+        assert np.isfinite(r["qor"]) and r["group_size"] >= 1
+        r2 = cli.serve("mcm2", X,
+                       budget={"energy": r["labels"]["energy"] + 1.0})
+        assert r2["feasible"]
+
+        # malformed SLAs and payloads are 400s
+        with pytest.raises(Exception, match="400"):
+            cli.serve("mcm2", X, tier="turbo")
+        with pytest.raises(Exception, match="400"):
+            cli._req("/serve", {"accel": "mcm2"})  # missing inputs
+        with pytest.raises(Exception, match="400"):
+            cli._req("/serve", {"inputs": [[1]]})  # missing accel
+        with pytest.raises(Exception, match="400"):
+            cli.serve("mcm2", X, tier="exact", budget={"energy": 1.0})
+        # omitting both tier and budget defaults to the balanced tier
+        assert cli.serve("mcm2", X)["tier"] == "balanced"
+
+        ss = cli.serving_stats()
+        assert ss["engines"]["mcm2"]["responses"] >= 2
+        assert ss["engines"]["mcm2"]["catalog"]["tiers"].keys() == {
+            "exact", "balanced", "budget"}
+        met = cli.metrics()
+        assert "repro_serving_requests_total" in met
+        assert "repro_serving_queue_depth" in met
+    finally:
+        srv.shutdown()
+        mgr.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# LM bridge: genome -> policy
+# ---------------------------------------------------------------------------
+
+def test_lm_policy_for_genome():
+    accel = make_accelerator("lm:falcon-mamba-7b")
+    lib = default_library()
+    g = accel.exact_genome(lib)
+    # exact genome -> no approximated classes
+    assert accel.policy_for_genome(g, lib).assignments == {}
+    g2 = g.copy()
+    g2[0] = (g2[0] + 1) % len(lib.kind("mul8s"))
+    pol = accel.policy_for_genome(g2, lib)
+    assert len(pol.assignments) == 1
+    with pytest.raises(ValueError, match="genes"):
+        accel.policy_for_genome(g[:-1], lib)
+    # the serving backend dispatch keys off this method
+    from repro.serving import LMBackend, make_backend
+
+    assert isinstance(make_backend(accel, lib), LMBackend)
