@@ -26,14 +26,17 @@ from typing import TYPE_CHECKING
 
 if TYPE_CHECKING:  # avoid circular import
     from ...accel.base import Accelerator
-from ... import obs
+from ... import faults, obs
 from ...core.acl.library import Circuit, Library
+from ...segments import SegmentedLog
 from .. import hw
 
 __all__ = [
     "SynthResult",
     "SynthCache",
     "JsonlSynthCache",
+    "SegmentedSynthCache",
+    "open_synth_cache",
     "synthesize_variant",
     "synthesize_batch",
     "circuit_features_synth",
@@ -329,6 +332,7 @@ class JsonlSynthCache(SynthCache):
         self.path = str(path)
         self._offset = 0
         self._fh = None
+        self.quarantined = 0  # malformed/torn records dropped, counted
         d = os.path.dirname(os.path.abspath(self.path))
         os.makedirs(d, exist_ok=True)
         with self._lock:
@@ -337,7 +341,9 @@ class JsonlSynthCache(SynthCache):
     def _replay_locked(self) -> None:
         if not os.path.exists(self.path):
             return
-        with open(self.path) as f:
+        # errors="replace": undecodable bit-rot must fail a line's CRC,
+        # not crash the replay
+        with open(self.path, errors="replace") as f:
             f.seek(self._offset)
             while True:
                 pos = f.tell()
@@ -348,6 +354,12 @@ class JsonlSynthCache(SynthCache):
                 try:
                     rec = json.loads(line)
                 except json.JSONDecodeError:
+                    # malformed complete line: dropped, but counted and
+                    # logged — never a silent swallow
+                    self.quarantined += 1
+                    obs.get_logger("synth.cache").warning(
+                        "quarantined malformed record in %s @%d",
+                        self.path, pos)
                     continue
                 if "k" in rec and "c" in rec:
                     # base-class store: replayed records must not be
@@ -376,6 +388,21 @@ class JsonlSynthCache(SynthCache):
         # consume any foreign tail BEFORE appending so advancing the
         # offset can never skip another process's records
         self._replay_locked()
+        # a torn tail from a dead writer would merge with our record and
+        # destroy both; newline-terminate it so it quarantines alone
+        try:
+            size = os.path.getsize(self.path)
+        except OSError:
+            size = 0
+        if size > self._offset:
+            torn = size - self._offset
+            self._fh.write("\n")
+            self._fh.flush()
+            self._offset = self._fh.tell()
+            self.quarantined += 1
+            obs.get_logger("synth.cache").warning(
+                "repaired torn tail in %s (%d bytes quarantined)",
+                self.path, torn)
         self._fh.write(json.dumps(obj, sort_keys=True) + "\n")
         self._fh.flush()
         self._offset = self._fh.tell()
@@ -406,6 +433,7 @@ class JsonlSynthCache(SynthCache):
     def stats(self) -> Dict[str, float]:
         s = super().stats()
         s["path"] = self.path
+        s["quarantined"] = self.quarantined
         return s
 
     def close(self) -> None:
@@ -419,6 +447,173 @@ class JsonlSynthCache(SynthCache):
             self.close()
         except Exception:
             pass
+
+
+class SegmentedSynthCache(SynthCache):
+    """Persistent ``SynthCache`` on the segmented CRC-framed log
+    (:mod:`repro.segments`) — the fleet-grade replacement for one big
+    ``JsonlSynthCache`` sidecar.
+
+    Record shapes are identical to ``JsonlSynthCache``'s (compiles and
+    family-verdict lines), but they live in fixed-size sealed segments
+    with per-record CRCs and a manifest: a damaged record or segment is
+    quarantined and counted (the lost compiles simply re-compile)
+    instead of poisoning a warm replay, and all appends/seals run under
+    one cross-process ``flock``.  Replay is eager — the compile cache is
+    small next to the label store and every record is needed to answer
+    lookups — but it is CRC-verified end to end."""
+
+    def __init__(self, path: str, *, segment_records: int = 4096):
+        super().__init__()
+        self.path = str(path)
+        self._seglog = SegmentedLog(self.path,
+                                    segment_records=segment_records,
+                                    name="synth")
+        self._known_segs = set()
+        with self._lock:
+            with self._seglog.lock():
+                self._sync_cache_locked()
+
+    # -- replay ---------------------------------------------------------
+    def _ingest_locked(self, rec) -> None:
+        if not isinstance(rec, dict):
+            return
+        if "k" in rec and "c" in rec:
+            SynthCache._store_locked(self, {
+                "k": rec["k"], "s": rec.get("s"),
+                "fam": rec.get("fam"),
+                "flops": float(rec["c"]["flops"]),
+                "hbm_bytes": float(rec["c"]["hbm_bytes"]),
+            })
+        elif "fam" in rec and "v" in rec:
+            v = rec["v"]
+            SynthCache._set_verdict_locked(
+                self, rec["fam"], False if v == "pinned" else int(v))
+
+    def _sync_cache_locked(self) -> None:
+        m, tail = self._seglog.sync_locked()
+        for e in m["sealed"]:
+            name = e["name"]
+            if name in self._known_segs:
+                continue
+            self._known_segs.add(name)
+            try:
+                recs, bad = self._seglog.read_segment(name)
+            except OSError as err:
+                recs, bad, reason = [], -1, f"unreadable: {err}"
+            else:
+                reason = f"{bad} damaged records"
+            if bad:
+                if bad > 0:
+                    self._seglog.quarantined_records += bad
+                self._seglog.quarantine_locked(name, reason)
+                self._known_segs.discard(name)
+                # salvaged records still serve; the rest re-compile
+            for rec in recs:
+                self._ingest_locked(rec)
+        for rec in tail:
+            self._ingest_locked(rec)
+
+    def refresh(self) -> int:
+        """Pick up records other processes appended/sealed."""
+        with self._lock:
+            with self._seglog.lock():
+                self._sync_cache_locked()
+            return len(self._by_id)
+
+    # -- writes ---------------------------------------------------------
+    def _append(self, obj: dict) -> None:
+        with self._seglog.lock():
+            self._sync_cache_locked()
+            self._seglog.append_locked([obj])
+
+    def _store_locked(self, rec: dict) -> None:
+        fresh = rec["k"] not in self._by_id
+        super()._store_locked(rec)
+        if fresh:
+            self._append({
+                "k": rec["k"], "s": rec.get("s"), "fam": rec.get("fam"),
+                "c": {"flops": rec["flops"],
+                      "hbm_bytes": rec["hbm_bytes"]},
+            })
+
+    def _set_verdict_locked(self, fam: str, v) -> None:
+        cur = self._verdicts.get(fam, _STRUCT_VERIFY_SAMPLES)
+        changed = (cur is False) != (v is False) or (
+            v is not False and cur != v
+        )
+        super()._set_verdict_locked(fam, v)
+        if changed:
+            self._append(
+                {"fam": fam, "v": "pinned" if v is False else int(v)}
+            )
+
+    def stats(self) -> Dict[str, float]:
+        s = super().stats()
+        s["path"] = self.path
+        seg = self._seglog.stats()
+        s["quarantined"] = seg.pop("quarantined")
+        s.update(seg)
+        return s
+
+    def close(self) -> None:
+        with self._lock:
+            self._seglog.close()
+
+    def __del__(self):  # best-effort
+        try:
+            self.close()
+        except Exception:
+            pass
+
+
+def open_synth_cache(path: str, *, migrate: bool = False,
+                     **kw) -> SynthCache:
+    """Open the right persistent compile cache for ``path``: a legacy
+    single-file ``<name>.jsonl`` with ``migrate=True`` auto-migrates
+    *warm* into a segmented root at ``<name>.segd`` (old file kept as
+    ``.migrated``); without ``migrate`` a ``.jsonl`` path opens the
+    already-migrated root when one exists, else the plain
+    :class:`JsonlSynthCache` — replicas never rename a file another
+    process may still be appending to.  Any other path is a segmented
+    root directly."""
+    p = str(path)
+    if not p.endswith(".jsonl"):
+        return SegmentedSynthCache(p, **kw)
+    root = p[:-len(".jsonl")] + ".segd"
+    if not migrate:
+        if os.path.isdir(root) and not os.path.isfile(p):
+            return SegmentedSynthCache(root, **kw)
+        return JsonlSynthCache(p, **kw)
+    cache = SegmentedSynthCache(root, **kw)
+    if os.path.isfile(p):
+        legacy = []
+        with open(p) as f:
+            for line in f:
+                if not line.endswith("\n"):
+                    continue  # torn legacy tail
+                try:
+                    rec = json.loads(line)
+                except json.JSONDecodeError:
+                    continue
+                if isinstance(rec, dict) and (
+                        ("k" in rec and "c" in rec)
+                        or ("fam" in rec and "v" in rec)):
+                    legacy.append(rec)
+        if legacy:
+            with cache._lock:
+                for rec in legacy:
+                    cache._ingest_locked(rec)
+                with cache._seglog.lock():
+                    cache._seglog.sync_locked()
+                    cache._seglog.append_locked(legacy)
+        try:
+            os.replace(p, p + ".migrated")
+        except OSError:  # a concurrent migrator won the rename
+            pass
+        obs.get_logger("synth.cache").info(
+            "migrated %d records from %s into %s", len(legacy), p, root)
+    return cache
 
 
 # the process-wide default cache: every label_variants call that does
@@ -677,6 +872,7 @@ def synthesize_batch(
     def _run_compile(idd: str, plan) -> None:
         kind, sdd, fam = plan
         specs = groups[idd][0].specs
+        faults.hit("synth.compile", kind=kind, identity=idd[:12])
         with obs.span("synth.compile", kind=kind, identity=idd[:12]):
             cost, wall = _compile_identity(accel, specs)
         cs = getattr(scache, "compile_seconds", None)

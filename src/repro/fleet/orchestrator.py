@@ -39,7 +39,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from .. import obs
+from .. import faults, obs
 from .leases import Chunk, FleetBatch, Lease, WorkerRecord
 from .protocol import (
     PROTOCOL_VERSION,
@@ -325,6 +325,15 @@ class FleetCoordinator:
                     "fleet.lease", lease=lease.id, worker=wid,
                     n=int(len(chunk.genomes)), requeues=chunk.requeues,
                 )
+            f = faults.check("fleet.lease", worker=wid, lease=lease.id)
+            if f is not None:
+                if f.delay_s > 0:
+                    time.sleep(f.delay_s)
+                if f.kind in ("drop", "error"):
+                    # grant lost in flight: the worker never sees it, so
+                    # the lease rides the normal TTL-expiry requeue path
+                    return {"ok": True, "lease": None,
+                            "idle_wait_s": self.idle_wait_s}
             return {
                 "ok": True,
                 "lease": {
@@ -340,6 +349,21 @@ class FleetCoordinator:
         """Accept a finished (or rejected) lease.  Duplicates and late
         results after a requeue are dropped idempotently — labels are
         deterministic, so whichever copy lands first is THE result."""
+        f = faults.check("fleet.result", lease=payload.get("lease"),
+                         worker=payload.get("worker"))
+        if f is not None:
+            if f.delay_s > 0:
+                time.sleep(f.delay_s)  # late delivery past the TTL
+            if f.kind in ("drop", "error"):
+                # result lost before ingest: the lease expires, the
+                # chunk requeues, and the (deterministic) labels are
+                # recomputed — nothing is lost, only delayed
+                return {"ok": True, "dropped": True}
+            if f.kind == "duplicate":
+                self._result_once(payload)  # second copy below dedupes
+        return self._result_once(payload)
+
+    def _result_once(self, payload: Dict) -> Dict:
         wid = str(payload.get("worker", ""))
         lid = str(payload.get("lease", ""))
         # worker-side spans piggyback on the result payload (the

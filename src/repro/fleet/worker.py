@@ -36,8 +36,8 @@ from typing import Dict, Optional
 
 import numpy as np
 
-from .. import obs
-from .http import HttpError, request_json
+from .. import faults, obs
+from .http import CircuitBreaker, HttpError, request_json
 from .protocol import PROTOCOL_VERSION, build_context, encode_labels
 
 __all__ = ["FleetWorker", "main"]
@@ -67,6 +67,12 @@ class FleetWorker:
         self.warm = warm
         self.request_timeout_s = float(request_timeout_s)
         self.verbose = verbose
+        # graceful degradation on the worker's one HTTP edge: fail fast
+        # while the orchestrator is down (breaker) and never let one
+        # call outlive a couple of lease TTLs (total deadline)
+        self._breaker = CircuitBreaker(
+            threshold=8, reset_s=5.0, name="worker")
+        self._post_deadline_s = max(4 * self.request_timeout_s, 60.0)
         self._stop = threading.Event()
         self._hb_thread: Optional[threading.Thread] = None
         self._heartbeat_s = 5.0
@@ -98,7 +104,9 @@ class FleetWorker:
 
     def _post(self, path: str, payload: Dict, *, retries: int = 4) -> Dict:
         return request_json(self.base + path, payload,
-                            timeout=self.request_timeout_s, retries=retries)
+                            timeout=self.request_timeout_s, retries=retries,
+                            breaker=self._breaker,
+                            total_deadline_s=self._post_deadline_s)
 
     def _init_engine(self) -> None:
         """One-time per-process warmup, exactly the process-pool worker
@@ -108,20 +116,23 @@ class FleetWorker:
         from ..core.features import synth
 
         if self.synth_cache_path:
+            # open_synth_cache resolves the path to whatever tier the
+            # service uses (segmented root or legacy jsonl) WITHOUT
+            # migrating — the service owns migration
             synth.set_shared_synth_cache(
-                synth.JsonlSynthCache(self.synth_cache_path))
+                synth.open_synth_cache(self.synth_cache_path))
         self._library = default_library()
         if self.warm:
             from ..service.workers import warm_library
 
             warm_library(self._library)
         if self.store_path:
-            from ..service.store import JsonlLabelStore
+            from ..service.store import open_label_store
 
             # read-only replica of the shared store: leased genomes that
             # already have labels are answered without recomputing (the
             # orchestrator commits results, so the worker never appends)
-            self._store = JsonlLabelStore(self.store_path)
+            self._store = open_label_store(self.store_path)
 
     def register(self) -> str:
         resp = self._post("/fleet/register", {
@@ -144,6 +155,12 @@ class FleetWorker:
     def _heartbeat_loop(self) -> None:
         while not self._stop.wait(self._heartbeat_s):
             try:
+                f = faults.check("fleet.heartbeat", worker=self.worker_id)
+                if f is not None:
+                    if f.delay_s > 0:
+                        time.sleep(f.delay_s)
+                    if f.kind in ("drop", "error"):
+                        continue  # beat lost in flight; TTL clock runs
                 fresh = self._verified_fps - self._fps_advertised
                 resp = self._post("/fleet/heartbeat", {
                     "worker": self.worker_id,

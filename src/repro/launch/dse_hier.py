@@ -102,9 +102,9 @@ def main():
         synth_cache=args.synth_cache or None,
     )
     if args.store:
-        from ..service.store import JsonlLabelStore
+        from ..service.store import open_label_store
 
-        store = JsonlLabelStore(args.store)
+        store = open_label_store(args.store)
         print(f"[dse-hier] label store {args.store}: {len(store)} entries")
     manager = CampaignManager(store, **mgr_kw)
     if manager.synth_cache is not None:

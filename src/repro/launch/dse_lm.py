@@ -92,7 +92,7 @@ def main():
     if args.synth_cache:
         from ..core.features import synth
 
-        cache = synth.JsonlSynthCache(args.synth_cache)
+        cache = synth.open_synth_cache(args.synth_cache)
         synth.set_shared_synth_cache(cache)
         print(f"[dse-lm] synth cache {args.synth_cache}: "
               f"{len(cache)} compiled structures")
@@ -100,9 +100,9 @@ def main():
     labeler = scheduler = None
     if args.store:
         from ..service.scheduler import EvalScheduler
-        from ..service.store import EvalContext, JsonlLabelStore
+        from ..service.store import EvalContext, open_label_store
 
-        store = JsonlLabelStore(args.store)
+        store = open_label_store(args.store)
         scheduler = EvalScheduler(store, n_workers=args.eval_workers)
         ctx = EvalContext(accel, lib, rank_genes=args.rank_genes,
                           n_qor_samples=cfg.n_qor_samples)

@@ -200,6 +200,16 @@ class Registry:
             insts = list(self._instruments.values())
         return {i.name: i.value for i in insts}
 
+    def collect(self, prefix: str) -> Dict[str, float]:
+        """Scalar snapshot of every instrument whose name starts with
+        ``prefix`` — how the chaos drill and ``/health`` gather one
+        subsystem's counters (e.g. ``repro_faults_``, ``repro_http_``)
+        without enumerating names at the call site."""
+        with self._lock:
+            insts = [i for i in self._instruments.values()
+                     if i.name.startswith(prefix)]
+        return {i.name: i.value for i in insts}
+
     def render(self) -> str:
         """Prometheus text exposition (format version 0.0.4)."""
         with self._lock:

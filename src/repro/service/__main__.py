@@ -11,7 +11,7 @@ import argparse
 from .. import obs
 from .api import serve
 from .campaigns import CampaignManager
-from .store import JsonlLabelStore
+from .store import open_label_store
 
 
 def main(argv=None):
@@ -91,7 +91,7 @@ def main(argv=None):
         obs.set_sink(args.trace)
         log.info("tracing to %s", args.trace)
 
-    store = JsonlLabelStore(args.store)
+    store = open_label_store(args.store, migrate=True)
     log.info("label store %s: %d entries", args.store, len(store))
     manager = CampaignManager(
         store,

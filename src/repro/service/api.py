@@ -132,6 +132,9 @@ class _Handler(BaseHTTPRequestHandler):
         try:
             if path == "/healthz":
                 return self._send({"ok": True})
+            if path == "/health":
+                h = mgr.health()
+                return self._send(h, 200 if h.get("ok") else 503)
             if path == "/metrics":
                 body = obs.render_prometheus().encode()
                 self.send_response(200)
@@ -216,6 +219,8 @@ class _Handler(BaseHTTPRequestHandler):
                 import numpy as np
 
                 from ..serving import EmptyFrontError, NoFrontError
+                from ..serving.engine import (DeadlineExceeded,
+                                              OverloadedError)
 
                 objectives = (tuple(payload["objectives"])
                               if payload.get("objectives") else None)
@@ -233,11 +238,18 @@ class _Handler(BaseHTTPRequestHandler):
                             gen=payload.get("gen"),
                             return_outputs=bool(
                                 payload.get("return_outputs")),
+                            deadline_s=payload.get("deadline_s"),
                         )
                 except (NoFrontError, EmptyFrontError) as exc:
                     # no completed campaign has produced a front yet:
                     # a state conflict, not a malformed request
                     return self._error(409, str(exc))
+                except OverloadedError as exc:
+                    # bounded-queue backpressure: retriable — the
+                    # fleet http client retries 429 with backoff
+                    return self._error(429, str(exc))
+                except DeadlineExceeded as exc:
+                    return self._error(504, str(exc))
                 return self._send(result)
             except (json.JSONDecodeError, TypeError, ValueError) as exc:
                 return self._error(400, f"bad serve request: {exc}")
@@ -372,6 +384,26 @@ class Client:
 
     def stats(self) -> Dict:
         return self._req("/stats")
+
+    def health(self) -> Dict:
+        """GET /health: readiness blob with ``ok``.  A degraded service
+        answers 503 with the same body — returned, not raised, so a
+        probe loop can inspect WHAT is unhealthy."""
+        from ..fleet.http import HttpError, request_json
+
+        try:
+            # no retries: a liveness probe wants the answer NOW
+            return request_json(self.base + "/health",
+                                timeout=self.timeout, retries=0)
+        except HttpError as exc:
+            if exc.code == 503 and "ok" in (exc.detail or ""):
+                import json as _json
+
+                try:
+                    return _json.loads(exc.detail)
+                except ValueError:
+                    pass
+            raise
 
     def serve(self, accel: str, inputs, **kw) -> Dict:
         """One inference through the serving tier.  ``inputs`` is a

@@ -480,18 +480,19 @@ class CampaignManager:
         snapshot_every: int = 1,
         snapshot_path: Optional[str] = None,
         synth_cache: Optional[object] = None,
+        serving: Optional[Dict] = None,
     ):
         self.store = store if store is not None else InMemoryLabelStore()
         # persistent structural compile cache (core.features.synth): a
-        # path builds a JsonlSynthCache shared by every campaign context
+        # path opens the segmented compile cache shared by every campaign
         # AND (by path) every process-pool labeler worker; a SynthCache
         # object is used as-is; None keeps the process-default in-memory
         # sharing
         self._owns_synth_cache = isinstance(synth_cache, str)
         if self._owns_synth_cache:
-            from ..core.features.synth import JsonlSynthCache
+            from ..core.features.synth import open_synth_cache
 
-            self.synth_cache = JsonlSynthCache(synth_cache)
+            self.synth_cache = open_synth_cache(synth_cache, migrate=True)
         else:
             self.synth_cache = synth_cache
         self.scheduler = scheduler or EvalScheduler(
@@ -547,6 +548,7 @@ class CampaignManager:
         # hub itself is created lazily on first POST /serve
         self._front_listeners: List = []
         self._serving = None
+        self._serving_kw = dict(serving or {})
         self._serving_lock = threading.Lock()
 
     # ------------------------------------------------------------------
@@ -1086,7 +1088,7 @@ class CampaignManager:
             if self._serving is None:
                 from ..serving import ServingHub
 
-                self._serving = ServingHub(self)
+                self._serving = ServingHub(self, **self._serving_kw)
             return self._serving
 
     def serving_stats(self) -> Dict:
@@ -1136,6 +1138,48 @@ class CampaignManager:
             hub = self._serving
         if hub is not None:
             out["serving"] = hub.stats()
+        return out
+
+    def health(self) -> Dict:
+        """Readiness/liveness in one JSON blob (``GET /health``): is
+        the label store writable, is the scheduler's batcher thread
+        alive, how many fleet workers are live (fleet backend only),
+        which serving engines are up, and whether a fault plan is
+        armed.  ``ok`` is the AND of the store and scheduler checks —
+        an empty fleet or an idle serving hub is degraded, not dead."""
+        from .. import faults
+
+        store_h = self.store.health()
+        sched_alive = self.scheduler._batcher.is_alive()
+        out = {
+            "store": store_h,
+            "scheduler": {
+                "alive": sched_alive,
+                "backend": self.scheduler.backend,
+            },
+            "faults": faults.stats(),
+        }
+        fleet = getattr(self.scheduler, "fleet", None)
+        if fleet is not None:
+            fs = fleet.stats()
+            out["fleet"] = {
+                "registered": fs["registered"],
+                "live": fs["live"],
+                "leases_in_flight": fs["leases_in_flight"],
+                "pending_chunks": fs["pending_chunks"],
+            }
+        with self._serving_lock:
+            hub = self._serving
+        if hub is not None:
+            engines = {}
+            with hub._lock:
+                for name, eng in hub._engines.items():
+                    engines[name] = {
+                        "alive": eng._thread.is_alive(),
+                        "queue_depth": len(eng._queue),
+                    }
+            out["serving"] = {"engines": engines}
+        out["ok"] = bool(store_h.get("writable")) and sched_alive
         return out
 
     def shutdown(self, *, wait: bool = True) -> None:

@@ -41,7 +41,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from .. import obs
+from .. import faults, obs
 from .store import LABEL_KEYS, EvalContext, LabelStore
 
 __all__ = ["EvalScheduler", "gather_futures"]
@@ -366,6 +366,8 @@ class EvalScheduler:
                 obs.span("sched.batch", n=len(batch),
                          origin=head.origin) as sp:
             try:
+                faults.hit("sched.dispatch", n=len(batch),
+                           origin=head.origin)
                 genomes = np.stack([e.genome for e in batch])
                 labels = self._ground_truth(ctx, genomes, sp)
                 recs = [

@@ -40,9 +40,10 @@ except ImportError:  # pragma: no cover - non-POSIX
 
 import numpy as np
 
-from .. import obs
+from .. import faults, obs
 from ..core.acl.library import Library, library_fingerprint
 from ..core.features import synth
+from ..segments import SegmentedLog
 
 __all__ = [
     "LABEL_KEYS",
@@ -52,7 +53,11 @@ __all__ = [
     "LabelStore",
     "InMemoryLabelStore",
     "JsonlLabelStore",
+    "SegmentedLabelStore",
+    "open_label_store",
 ]
+
+_log = obs.get_logger("store")
 
 # the per-genome record produced by synth.label_variants
 LABEL_KEYS = synth.LABEL_KEYS
@@ -230,6 +235,13 @@ class LabelStore:
             "hit_rate": (hits / total) if total else 0.0,
         }
 
+    def health(self) -> Dict[str, object]:
+        """Readiness probe for ``GET /health``: can this store still
+        accept writes?  Disk-backed stores check their directory."""
+        with self._lock:
+            n = self._len()
+        return {"writable": True, "entries": n}
+
     # implementations override (called under the lock):
     def _get(self, key: str) -> Optional[Dict[str, float]]:
         raise NotImplementedError
@@ -291,6 +303,7 @@ class JsonlLabelStore(LabelStore):
         self.path = str(path)
         self.auto_compact_ratio = auto_compact_ratio
         self.compactions = 0
+        self.quarantined = 0  # malformed/torn records dropped, counted
         self._data: Dict[str, Dict[str, float]] = {}
         self._offset = 0  # bytes already replayed; refresh parses the tail
         self._n_lines = 0  # complete lines in the file (incl. duplicates)
@@ -306,6 +319,7 @@ class JsonlLabelStore(LabelStore):
         """Cross-process advisory lock serializing appends with
         compaction (``flock`` on a sidecar, so lock acquisition never
         touches — or keeps alive — the replaced data inode)."""
+        faults.hit("store.lock", path=self.path)
         if fcntl is None:  # pragma: no cover - non-POSIX
             yield
             return
@@ -323,7 +337,9 @@ class JsonlLabelStore(LabelStore):
         top — the index is keyed, so re-reading is idempotent."""
         if not os.path.exists(self.path):
             return
-        with open(self.path) as f:
+        # errors="replace": undecodable bit-rot must fail a line's CRC,
+        # not crash the replay
+        with open(self.path, errors="replace") as f:
             ino = os.fstat(f.fileno()).st_ino
             if self._ino is not None and ino != self._ino:
                 # the path was atomically replaced under us: our offset
@@ -348,7 +364,11 @@ class JsonlLabelStore(LabelStore):
                     rec = json.loads(line)
                     self._data[rec["k"]] = rec["l"]
                 except (json.JSONDecodeError, KeyError):
-                    pass  # malformed complete line: skip permanently
+                    # malformed complete line: skipped permanently, but
+                    # never silently — drills and /stats see the count
+                    self.quarantined += 1
+                    _log.warning("quarantined malformed record in %s @%d",
+                                 self.path, pos)
 
     def refresh(self) -> int:
         """Re-read the backing file (pick up other processes' appends).
@@ -386,6 +406,9 @@ class JsonlLabelStore(LabelStore):
                 f.flush()
                 os.fsync(f.fileno())
             os.replace(tmp, self.path)
+            # a kill here (mid-rename window) loses nothing: the rename
+            # was atomic and the next writer re-checks the inode
+            faults.hit("store.compact", path=self.path)
             self._offset = os.path.getsize(self.path)
             self._n_lines = len(self._data)
             self._ino = os.stat(self.path).st_ino
@@ -425,8 +448,34 @@ class JsonlLabelStore(LabelStore):
         # records and our records cannot land in a dropped inode
         with obs.span("store.put", n=len(fresh)), self._write_lock():
             self._replay()
+            f = faults.check("store.append", n=len(fresh))
+            if f is not None:
+                if f.kind == "torn_write":
+                    # simulate a foreign writer dying mid-append
+                    with open(self.path, "a") as gf:
+                        gf.write('{"k": "__torn__", "l": {')
+                elif f.kind == "error":
+                    f.raise_()
+                elif f.delay_s > 0:
+                    time.sleep(f.delay_s)
             if self._fh is None:
                 self._fh = open(self.path, "a")
+            # a torn tail left by a dead writer would merge with our
+            # first record and destroy both; terminate it so it becomes
+            # its own quarantined malformed line instead
+            try:
+                size = os.path.getsize(self.path)
+            except OSError:
+                size = 0
+            if size > self._offset:
+                torn = size - self._offset
+                self._fh.write("\n")
+                self._fh.flush()
+                self._offset = self._fh.tell()
+                self._n_lines += 1
+                self.quarantined += 1
+                _log.warning("repaired torn tail in %s (%d bytes"
+                             " quarantined)", self.path, torn)
             now = time.time()
             self._fh.write("".join(
                 json.dumps({"k": key, "l": rec, "t": now},
@@ -445,7 +494,16 @@ class JsonlLabelStore(LabelStore):
         with self._lock:
             s["lines"] = self._n_lines
             s["compactions"] = self.compactions
+            s["quarantined"] = self.quarantined
         return s
+
+    def health(self) -> Dict[str, object]:
+        h = super().health()
+        d = os.path.dirname(os.path.abspath(self.path)) or "."
+        h["writable"] = os.access(d, os.W_OK)
+        h["path"] = self.path
+        h["quarantined"] = self.quarantined
+        return h
 
     def close(self) -> None:
         with self._lock:
@@ -458,3 +516,206 @@ class JsonlLabelStore(LabelStore):
             self.close()
         except Exception:
             pass
+
+
+class SegmentedLabelStore(LabelStore):
+    """Label store on the segmented, CRC-framed log — the persistence
+    tier for 10^6+ labels (see :mod:`repro.segments`).
+
+    Warm start is O(manifest + key sidecars), not O(records): sealed
+    segments enter the in-memory index as *lazy references* (key →
+    segment name) and a segment's bodies are parsed only when one of its
+    keys is actually read (``segments_loaded`` counts those).  Damage is
+    survived, not fatal: a CRC-failing record is quarantined and
+    counted; a damaged sealed segment is moved to ``quarantine/`` and
+    its unsalvaged keys become clean misses (relabeled on demand) while
+    the campaign continues.  Appends, seals and retention run under one
+    cross-process ``flock``, preserving the multi-writer-process safety
+    the fleet relies on.  ``retention_segments`` (opt-in) bounds disk by
+    evicting the oldest sealed segments — evicted keys miss and relabel.
+    """
+
+    def __init__(self, root: str, *, segment_records: int = 4096,
+                 retention_segments: Optional[int] = None):
+        super().__init__()
+        self.root = str(root)
+        self.segments_loaded = 0
+        self._seglog = SegmentedLog(
+            self.root, segment_records=segment_records,
+            retention_segments=retention_segments,
+            index_field="k", name="labels")
+        # key -> label dict (loaded) | segment name (lazy reference)
+        self._data: Dict[str, object] = {}
+        self._known_segs = set()
+        with self._seglog.lock():
+            self._sync_locked()
+
+    # -- reconcile index with the log ----------------------------------
+    def _sync_locked(self) -> None:
+        m, tail = self._seglog.sync_locked()
+        live = {e["name"] for e in m["sealed"]}
+        for e in m["sealed"]:
+            name = e["name"]
+            if name in self._known_segs:
+                continue
+            self._known_segs.add(name)
+            keys = self._seglog.read_index(name)
+            if keys is None:
+                # sidecar missing/damaged: fall back to reading bodies
+                self._load_segment_locked(name)
+                continue
+            for k in keys:
+                cur = self._data.get(k)
+                if cur is None or isinstance(cur, str):
+                    self._data[k] = name
+        # a foreign process may have quarantined/retired segments we
+        # still reference: turn those refs back into clean misses
+        stale = self._known_segs - live
+        if stale:
+            self._known_segs &= live
+            for k in [k for k, v in self._data.items()
+                      if isinstance(v, str) and v in stale]:
+                del self._data[k]
+        for rec in tail:
+            if isinstance(rec, dict) and "k" in rec and "l" in rec:
+                self._data[rec["k"]] = rec["l"]
+
+    def _load_segment_locked(self, name: str) -> None:
+        """Parse one sealed segment's bodies into the index; damaged
+        segments are quarantined and their lost keys dropped."""
+        self.segments_loaded += 1
+        try:
+            recs, bad = self._seglog.read_segment(name)
+        except OSError as e:
+            recs, bad = [], -1
+            reason = f"unreadable: {e}"
+        else:
+            reason = f"{bad} damaged records"
+        for rec in recs:
+            if isinstance(rec, dict) and "k" in rec and "l" in rec:
+                cur = self._data.get(rec["k"])
+                if cur is None or isinstance(cur, str):
+                    self._data[rec["k"]] = rec["l"]
+        if bad:
+            if bad > 0:
+                self._seglog.quarantined_records += bad
+            self._seglog.quarantine_locked(name, reason)
+            self._known_segs.discard(name)
+            for k in [k for k, v in self._data.items() if v == name]:
+                del self._data[k]
+
+    # -- LabelStore interface ------------------------------------------
+    def _get(self, key):
+        v = self._data.get(key)
+        if v is None or isinstance(v, dict):
+            return v
+        with self._seglog.lock():  # lazy ref: materialize its segment
+            if isinstance(self._data.get(key), str):
+                self._load_segment_locked(v)
+        v = self._data.get(key)
+        return v if isinstance(v, dict) else None
+
+    def _put(self, key, rec):
+        self._put_batch([(key, rec)])
+
+    def _put_batch(self, recs) -> None:
+        fresh = []
+        now = time.time()
+        for key, rec in recs:
+            known = key in self._data  # lazy ref counts: labels are
+            self._data[key] = rec      # deterministic, values identical
+            if not known:
+                fresh.append({"k": key, "l": rec, "t": now})
+        if not fresh:
+            return
+        with obs.span("store.put", n=len(fresh)), self._seglog.lock():
+            self._sync_locked()
+            res = self._seglog.append_locked(fresh)
+            for k in res["dropped_keys"]:  # retention evictions
+                self._data.pop(k, None)
+
+    def _len(self):
+        return len(self._data)
+
+    def refresh(self) -> int:
+        """Pick up other processes' appends/seals (fleet warm reuse)."""
+        with self._lock:
+            with self._seglog.lock():
+                self._sync_locked()
+            return len(self._data)
+
+    def stats(self) -> Dict[str, float]:
+        s = super().stats()
+        with self._lock:
+            s.update(self._seglog.stats())
+            s["segments_loaded"] = self.segments_loaded
+        return s
+
+    def health(self) -> Dict[str, object]:
+        h = super().health()
+        h["writable"] = os.access(self.root, os.W_OK)
+        h["path"] = self.root
+        h["quarantined"] = self._seglog.quarantined_records
+        h["quarantined_segments"] = self._seglog.quarantined_segments
+        return h
+
+    def close(self) -> None:
+        with self._lock:
+            self._seglog.close()
+
+    def __del__(self):  # best-effort
+        try:
+            self.close()
+        except Exception:
+            pass
+
+
+def open_label_store(path: str, *, migrate: bool = False,
+                     **kw) -> LabelStore:
+    """Open the right disk store for ``path``.
+
+    * an existing directory (or any path without a ``.jsonl`` suffix)
+      → :class:`SegmentedLabelStore` rooted there;
+    * a legacy single-file ``<name>.jsonl`` with ``migrate=True`` (the
+      service CLI) → a segmented store rooted at ``<name>.segd`` with
+      the legacy records auto-migrated *warm* (every old label answers
+      without recompute; the old file is kept as ``.jsonl.migrated``);
+    * a ``.jsonl`` path without ``migrate`` (fleet workers, launch
+      CLIs) → the already-migrated segmented root if one exists, else a
+      plain :class:`JsonlLabelStore` — replicas never migrate a file
+      another process may still be appending to.
+    """
+    p = str(path)
+    if not p.endswith(".jsonl"):
+        return SegmentedLabelStore(p, **kw)
+    root = p[:-len(".jsonl")] + ".segd"
+    if not migrate:
+        if os.path.isdir(root) and not os.path.isfile(p):
+            return SegmentedLabelStore(root, **kw)
+        return JsonlLabelStore(p, **kw)
+    store = SegmentedLabelStore(root, **kw)
+    if os.path.isfile(p):
+        migrated = 0
+        batch = []
+        with open(p) as f:
+            for line in f:
+                if not line.endswith("\n"):
+                    continue  # torn legacy tail
+                try:
+                    rec = json.loads(line)
+                    batch.append((rec["k"], rec["l"]))
+                    migrated += 1
+                except (json.JSONDecodeError, KeyError, TypeError):
+                    continue
+                if len(batch) >= 10000:
+                    store.put_many(batch)
+                    batch = []
+        if batch:
+            store.put_many(batch)
+        try:
+            os.replace(p, p + ".migrated")
+        except OSError:  # a concurrent migrator beat us to the rename
+            pass
+        _log.info("migrated %d records from %s into %s",
+                  migrated, p, root)
+    return store

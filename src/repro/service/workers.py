@@ -82,7 +82,10 @@ def _init_worker(xla_flags: str = "", synth_cache_path: str = "") -> None:
     from ..core.features import synth
 
     if synth_cache_path:
-        synth.set_shared_synth_cache(synth.JsonlSynthCache(synth_cache_path))
+        # non-migrating open: the parent already owns (and may have
+        # migrated) this path; replicas must never rename it
+        synth.set_shared_synth_cache(
+            synth.open_synth_cache(synth_cache_path))
     lib = default_library()
     warm_library(lib)
     # pre-build (and probe-verify) the fused sim engine's adder twins so

@@ -35,12 +35,27 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from .. import obs
+from .. import faults, obs
 from ..core.acl.library import default_library
 from .backends import make_backend
 from .catalog import EmptyFrontError, FrontCatalog, Selection
 
-__all__ = ["ServeRequest", "ServingEngine"]
+__all__ = ["DeadlineExceeded", "OverloadedError", "ServeRequest",
+           "ServingEngine"]
+
+
+class OverloadedError(RuntimeError):
+    """Admission queue full — the request was rejected WITHOUT being
+    enqueued.  Retriable: the caller should back off and resubmit (the
+    HTTP layer maps this to 429)."""
+
+    retriable = True
+
+
+class DeadlineExceeded(TimeoutError):
+    """The request's ``deadline_s`` elapsed before its group ran; it
+    was dropped instead of burning backend time on an answer nobody is
+    waiting for."""
 
 _log = obs.get_logger("repro.serving")
 
@@ -76,6 +91,12 @@ def _metrics() -> Dict[str, object]:
                 degrades=R.counter(
                     "repro_serving_degrades_total",
                     "infeasible budgets degraded to nearest-feasible"),
+                rejects=R.counter(
+                    "repro_serving_rejects_total",
+                    "requests rejected at admission (queue full)"),
+                expired=R.counter(
+                    "repro_serving_deadline_expired_total",
+                    "requests dropped after their deadline elapsed"),
                 depth=R.gauge(
                     "repro_serving_queue_depth", "admission queue depth"),
                 latency=R.histogram(
@@ -106,6 +127,7 @@ class ServeRequest:
     pin_version: Optional[int] = None
     gen: Optional[int] = None            # LM: tokens to decode
     return_outputs: bool = False
+    deadline: Optional[float] = None     # absolute perf_counter time
     future: Future = field(default_factory=Future)
     span: object = None                  # serving.request (submitter ctx)
     t_submit: float = field(default_factory=time.perf_counter)
@@ -125,6 +147,7 @@ class ServingEngine:
         max_wait_s: float = 0.005,
         keep_catalogs: int = 8,
         default_tier: str = "balanced",
+        max_queue: int = 256,
     ):
         if isinstance(accel, str):
             from ..service.campaigns import make_accelerator
@@ -139,6 +162,7 @@ class ServingEngine:
         self.max_wait_s = float(max_wait_s)
         self.keep_catalogs = max(1, int(keep_catalogs))
         self.default_tier = str(default_tier)
+        self.max_queue = max(1, int(max_queue))
 
         self._cond = threading.Condition()
         self._queue: deque = deque()
@@ -153,7 +177,7 @@ class ServingEngine:
         # engine-local breakdowns (instruments are process-wide)
         self._n: Dict[str, int] = dict(
             requests=0, responses=0, errors=0, batches=0, groups=0,
-            hot_swaps=0, degrades=0,
+            hot_swaps=0, degrades=0, rejects=0, expired=0,
         )
         self._tier_counts: Dict[str, int] = {}
         self._served_by_version: Dict[int, int] = {}
@@ -243,10 +267,17 @@ class ServingEngine:
         pin_version: Optional[int] = None,
         gen: Optional[int] = None,
         return_outputs: bool = False,
+        deadline_s: Optional[float] = None,
     ) -> Future:
         """Admit one request; returns a Future resolving to the result
         record.  SLA errors (unknown tier, bad budget, unknown pinned
-        version, empty front) surface as ValueError on the future."""
+        version, empty front) surface as ValueError on the future.
+
+        Graceful degradation: when the admission queue already holds
+        ``max_queue`` requests the call raises :class:`OverloadedError`
+        immediately (retriable — nothing was enqueued); a request whose
+        ``deadline_s`` elapses before its group runs fails with
+        :class:`DeadlineExceeded` instead of burning backend time."""
         if self._closed:
             raise RuntimeError("serving engine is closed")
         req = ServeRequest(
@@ -257,6 +288,8 @@ class ServingEngine:
             pin_version=int(pin_version) if pin_version is not None else None,
             gen=gen,
             return_outputs=bool(return_outputs),
+            deadline=(time.perf_counter() + float(deadline_s)
+                      if deadline_s is not None else None),
         )
         # started in the SUBMITTER's trace context: the request span
         # carries the caller's trace id through batch formation and is
@@ -265,12 +298,25 @@ class ServingEngine:
             "serving.request", accel=self.accel.name, request=req.id,
             tier=tier, pinned=req.pin_version,
         )
-        self._m["requests"].inc()
         with self._cond:
-            self._n["requests"] += 1
-            self._queue.append(req)
-            self._m["depth"].set(len(self._queue))
-            self._cond.notify_all()
+            if len(self._queue) >= self.max_queue:
+                # bounded admission: reject NOW (nothing enqueued) so
+                # the caller can shed load instead of queueing forever
+                self._n["rejects"] += 1
+                depth = len(self._queue)
+            else:
+                depth = None
+                self._n["requests"] += 1
+                self._queue.append(req)
+                self._m["depth"].set(len(self._queue))
+                self._cond.notify_all()
+        if depth is not None:
+            self._m["rejects"].inc()
+            req.span.end(error="OverloadedError: queue full")
+            raise OverloadedError(
+                f"serving queue full ({depth}/{self.max_queue}); "
+                "retry with backoff")
+        self._m["requests"].inc()
         return req.future
 
     def serve(self, inputs, *, timeout: float = 300.0, **kw) -> Dict:
@@ -320,6 +366,16 @@ class ServingEngine:
                 self._n["batches"] += 1
             groups: "OrderedDict[tuple, tuple]" = OrderedDict()
             for req in batch:
+                if (req.deadline is not None
+                        and time.perf_counter() > req.deadline):
+                    self._m["expired"].inc()
+                    with self._cond:
+                        self._n["expired"] += 1
+                    self._fail(req, DeadlineExceeded(
+                        f"request {req.id} waited "
+                        f"{time.perf_counter() - req.t_submit:.3f}s, "
+                        "past its deadline"))
+                    continue
                 cat = catalog
                 if req.pin_version is not None:
                     cat = catalogs.get(req.pin_version)
@@ -353,6 +409,8 @@ class ServingEngine:
                       tier=tier_label, version=version, n=len(reqs)):
             self._m["groups"].inc()
             try:
+                faults.hit("serving.backend", accel=self.accel.name,
+                           tier=tier_label, n=len(reqs))
                 results = self.backend.run(sel.point, reqs)
             except Exception as exc:  # noqa: BLE001 - group isolation
                 _log.exception("group execution failed (tier=%s)",

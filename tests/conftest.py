@@ -28,6 +28,18 @@ def _reset_synth_engine_state():
 
 
 @pytest.fixture(autouse=True)
+def _reset_fault_plan():
+    """Fault injection is module-global (an armed plan fires at every
+    instrumented point in the process); a test that installs a plan
+    must never leave it armed for the next one."""
+    from repro import faults
+
+    faults.uninstall()
+    yield
+    faults.uninstall()
+
+
+@pytest.fixture(autouse=True)
 def _reset_fused_sim_state():
     """The fused population-sim engine keeps module-global state too
     (compiled programs, plan/pin/verification history, counters); tests

@@ -1,0 +1,288 @@
+"""Chaos harness: deterministic fault plans, the injection runtime's
+schedule semantics, the http retry/breaker/deadline guards, and the
+graceful-degradation paths they drive."""
+
+import json
+import os
+import subprocess
+import sys
+import threading
+import time
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+import pytest
+
+from repro import faults, obs
+from repro.faults import FaultInjected, FaultPlan, FaultRule
+from repro.fleet.http import CircuitBreaker, HttpError, request_json
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+# ---------------------------------------------------------------------------
+# plans: validation + serialization
+# ---------------------------------------------------------------------------
+
+def test_plan_roundtrips_through_json(tmp_path):
+    plan = (FaultPlan(seed=7, name="drill")
+            .add("store.append", "torn_write", times=2, fraction=0.3)
+            .add("http.request", "error", status=503, p=0.5, after=3)
+            .add("synth.compile", "latency", delay_s=0.01))
+    path = plan.save(str(tmp_path / "plan.json"))
+    back = FaultPlan.from_file(path)
+    assert back.to_dict() == plan.to_dict()
+    assert back.seed == 7 and len(back.rules) == 3
+    assert back.rules[1].status == 503 and back.rules[1].after == 3
+
+
+def test_rule_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultRule("x", kind="explode")
+    with pytest.raises(ValueError, match="p must be"):
+        FaultRule("x", p=1.5)
+    with pytest.raises(ValueError, match="fraction"):
+        FaultRule("x", kind="torn_write", fraction=1.0)
+
+
+def test_rule_glob_matching():
+    r = FaultRule("store.*")
+    assert r.matches("store.append") and r.matches("store.seal")
+    assert not r.matches("http.request")
+
+
+# ---------------------------------------------------------------------------
+# injection runtime: zero-cost idle, deterministic armed
+# ---------------------------------------------------------------------------
+
+def test_check_is_none_when_disarmed():
+    assert not faults.active()
+    assert faults.check("store.append") is None
+    assert faults.hit("sched.dispatch") is None
+
+
+def test_schedule_after_times():
+    faults.install(FaultPlan(seed=1).add(
+        "p.x", "drop", after=2, times=2))
+    fired = [faults.check("p.x") is not None for _ in range(6)]
+    assert fired == [False, False, True, True, False, False]
+    assert faults.stats()["by_point"] == {"p.x": 2}
+
+
+def test_probability_is_deterministic_per_seed():
+    def pattern(seed):
+        faults.reset()
+        faults.install(FaultPlan(seed=seed).add("p.y", "drop", p=0.5))
+        return [faults.check("p.y") is not None for _ in range(32)]
+
+    a, b = pattern(3), pattern(3)
+    assert a == b                      # same seed -> same storm
+    assert a != pattern(4)             # different seed -> different storm
+    assert 1 <= sum(a) <= 31           # the coin actually flips
+
+
+def test_hit_raises_error_kind_and_sleeps_latency():
+    faults.install(FaultPlan().add("p.err", "error", times=1,
+                                   status=503, message="boom"))
+    with pytest.raises(FaultInjected) as ei:
+        faults.hit("p.err")
+    assert ei.value.status == 503 and "boom" in str(ei.value)
+    assert faults.hit("p.err") is None          # times budget spent
+
+    faults.install(FaultPlan().add("p.lat", "latency", delay_s=0.05))
+    t0 = time.perf_counter()
+    assert faults.hit("p.lat") is None          # latency self-applies
+    assert time.perf_counter() - t0 >= 0.04
+
+
+def test_first_matching_rule_wins_and_counter_counts():
+    faults.install(FaultPlan()
+                   .add("p.z", "drop", times=1)
+                   .add("p.*", "duplicate"))
+    assert faults.check("p.z").kind == "drop"
+    assert faults.check("p.z").kind == "duplicate"
+    st = faults.stats()
+    assert st["injected"] == 2 and st["active"]
+    assert obs.REGISTRY.collect("repro_faults_")[
+        "repro_faults_injected_total"] >= 2
+
+
+def test_env_arming_reaches_subprocess(tmp_path):
+    """REPRO_FAULTS travels to worker subprocesses: the child sees the
+    armed plan at import time and fires deterministically."""
+    plan = FaultPlan(seed=9, name="env").add("child.point", "drop",
+                                             times=1)
+    path = plan.save(str(tmp_path / "plan.json"))
+    out = subprocess.run(
+        [sys.executable, "-c",
+         "from repro import faults;"
+         "print(faults.active(), faults.installed().name,"
+         "      faults.check('child.point') is not None,"
+         "      faults.check('child.point') is not None)"],
+        capture_output=True, text=True, check=True,
+        env={**os.environ, "PYTHONPATH": SRC, "REPRO_FAULTS": path},
+    )
+    assert out.stdout.split() == ["True", "env", "True", "False"]
+
+
+def test_broken_env_plan_is_ignored():
+    out = subprocess.run(
+        [sys.executable, "-c",
+         "from repro import faults; print(faults.active())"],
+        capture_output=True, text=True, check=True,
+        env={**os.environ, "PYTHONPATH": SRC,
+             "REPRO_FAULTS": "/nonexistent/plan.json"},
+    )
+    assert out.stdout.strip() == "False"
+
+
+# ---------------------------------------------------------------------------
+# http: injected storms ride the real retry path; breaker + deadline
+# ---------------------------------------------------------------------------
+
+class _Echo(BaseHTTPRequestHandler):
+    def do_GET(self):
+        body = json.dumps({"ok": True}).encode()
+        self.send_response(200)
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def log_message(self, *a):
+        pass
+
+
+@pytest.fixture
+def echo_server():
+    srv = ThreadingHTTPServer(("127.0.0.1", 0), _Echo)
+    threading.Thread(target=srv.serve_forever, daemon=True).start()
+    yield f"http://127.0.0.1:{srv.server_address[1]}"
+    srv.shutdown()
+
+
+def test_injected_503_burst_recovers_via_retry(echo_server):
+    faults.install(FaultPlan().add("http.request", "error",
+                                   status=503, times=2))
+    out = request_json(echo_server + "/x", retries=3, backoff_s=0.01)
+    assert out == {"ok": True}
+    assert faults.stats()["by_point"]["http.request"] == 2
+
+
+def test_injected_storm_exhausts_retries(echo_server):
+    faults.install(FaultPlan().add("http.request", "error", status=503))
+    with pytest.raises(HttpError) as ei:
+        request_json(echo_server + "/x", retries=2, backoff_s=0.01)
+    assert ei.value.code == 503
+
+
+def test_total_deadline_caps_the_storm():
+    t0 = time.perf_counter()
+    with pytest.raises(HttpError):
+        request_json("http://127.0.0.1:9", retries=50, backoff_s=0.5,
+                     total_deadline_s=0.4)
+    assert time.perf_counter() - t0 < 2.0
+
+
+def test_breaker_opens_fast_fails_and_recloses(echo_server):
+    br = CircuitBreaker(threshold=2, reset_s=0.15, name="t")
+    faults.install(FaultPlan().add("http.request", "error",
+                                   status=503, times=2))
+    for _ in range(2):
+        with pytest.raises(HttpError):
+            request_json(echo_server + "/x", retries=0, breaker=br)
+    assert br.state == "open"
+    # fast-fail while open: no attempt reaches the wire
+    with pytest.raises(HttpError, match="circuit_open"):
+        request_json(echo_server + "/x", retries=0, breaker=br)
+    time.sleep(0.2)
+    assert br.state == "half_open"
+    # half-open probe succeeds (fault budget spent) -> circuit recloses
+    assert request_json(echo_server + "/x", retries=0,
+                        breaker=br) == {"ok": True}
+    assert br.state == "closed"
+
+
+def test_breaker_failed_probe_reopens():
+    br = CircuitBreaker(threshold=1, reset_s=0.1)
+    br.record_failure()
+    assert br.state == "open"
+    time.sleep(0.12)
+    assert br.allow()           # the probe slot
+    assert not br.allow()       # only ONE probe at a time
+    br.record_failure()
+    assert br.state == "open"   # failed probe restarts the window
+
+
+def test_nonretryable_4xx_does_not_trip_breaker(echo_server):
+    br = CircuitBreaker(threshold=1)
+    faults.install(FaultPlan().add("http.request", "error",
+                                   status=404, times=1))
+    with pytest.raises(HttpError):
+        request_json(echo_server + "/x", retries=2, breaker=br)
+    assert br.state == "closed"  # caller bug, not peer health
+
+
+# ---------------------------------------------------------------------------
+# graceful degradation through the stack
+# ---------------------------------------------------------------------------
+
+def test_scheduler_dispatch_fault_fails_waiters_cleanly():
+    import numpy as np
+
+    from repro.accel import MCMAccelerator
+    from repro.core.acl.library import default_library
+    from repro.service.scheduler import EvalScheduler
+    from repro.service.store import EvalContext, InMemoryLabelStore
+
+    ctx = EvalContext(MCMAccelerator(1), default_library(),
+                      n_qor_samples=2)
+    sched = EvalScheduler(InMemoryLabelStore(), n_workers=1)
+    try:
+        faults.install(FaultPlan().add("sched.dispatch", "error",
+                                       times=1, message="chaos"))
+        g = np.zeros((1, len(ctx.accel.slots)), dtype=np.int64)
+        with pytest.raises(FaultInjected):
+            sched.label(ctx, g, campaign="c1")
+        faults.uninstall()
+        labels = sched.label(ctx, g, campaign="c1")  # next batch is fine
+        assert set(labels) >= {"qor", "energy"}
+    finally:
+        sched.shutdown()
+
+
+def test_manager_health_blob():
+    from repro.service import CampaignManager
+
+    mgr = CampaignManager(eval_workers=1, campaign_workers=1)
+    try:
+        h = mgr.health()
+        assert h["ok"] is True
+        assert h["store"]["writable"] is True
+        assert h["scheduler"]["alive"] is True
+        assert h["faults"]["active"] is False
+        faults.install(FaultPlan(name="armed"))
+        assert mgr.health()["faults"]["plan"] == "armed"
+    finally:
+        mgr.shutdown()
+
+
+def test_health_endpoint_and_client(tmp_path):
+    import threading as _t
+
+    from repro.service import CampaignManager
+    from repro.service.api import Client, make_server
+    from repro.service.store import open_label_store
+
+    store = open_label_store(str(tmp_path / "labels.segd"))
+    mgr = CampaignManager(store, eval_workers=1, campaign_workers=1)
+    srv = make_server(mgr, port=0)
+    _t.Thread(target=srv.serve_forever, daemon=True).start()
+    try:
+        cli = Client(f"http://127.0.0.1:{srv.server_address[1]}")
+        h = cli.health()
+        assert h["ok"] is True
+        assert h["store"]["path"].endswith("labels.segd")
+        assert "quarantined" in h["store"]
+    finally:
+        srv.shutdown()
+        mgr.shutdown()
+        store.close()

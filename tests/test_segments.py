@@ -1,0 +1,347 @@
+"""Segmented persistence tier: CRC framing, fixed-size sealing, O(1)
+warm start, quarantine-and-continue, torn-tail repair, retention,
+orphan adoption, and the legacy single-file migration path."""
+
+import json
+import os
+
+import pytest
+
+from repro import faults
+from repro.faults import FaultPlan
+from repro.segments import SegmentedLog, frame_record, parse_line
+from repro.service.store import (
+    JsonlLabelStore,
+    SegmentedLabelStore,
+    open_label_store,
+)
+
+LABELS = None  # filled lazily from LABEL_KEYS
+
+
+def _rec(i):
+    global LABELS
+    if LABELS is None:
+        from repro.service.store import LABEL_KEYS
+        LABELS = list(LABEL_KEYS)
+    return {k: float(i * 10 + j) for j, k in enumerate(LABELS)}
+
+
+def _fill(store, n, start=0):
+    store.put_many((f"k{start + i:05d}", _rec(start + i))
+                   for i in range(n))
+
+
+# ---------------------------------------------------------------------------
+# framing
+# ---------------------------------------------------------------------------
+
+def test_frame_parse_roundtrip():
+    line = frame_record({"a": 1, "b": [2, 3]})
+    assert line.endswith("\n")
+    assert parse_line(line[:-1]) == {"a": 1, "b": [2, 3]}
+
+
+def test_parse_rejects_damage():
+    good = frame_record({"x": 1})[:-1]
+    assert parse_line(good[:-2]) is None                 # torn
+    assert parse_line("zz" + good[2:]) is None           # bad crc hex
+    flipped = good[:12] + ("0" if good[12] != "0" else "1") + good[13:]
+    assert parse_line(flipped) is None                   # bit flip
+    assert parse_line(good + good) is None               # merged lines
+    assert parse_line("short") is None
+
+
+# ---------------------------------------------------------------------------
+# segmented label store: seal, warm start, lazy load
+# ---------------------------------------------------------------------------
+
+def test_fixed_size_seals_and_roundtrip(tmp_path):
+    root = str(tmp_path / "labels.segd")
+    s = SegmentedLabelStore(root, segment_records=5)
+    _fill(s, 12)
+    st = s.stats()
+    assert st["segments"] == 2 and st["active_records"] == 2
+    assert s.get("k00000") == _rec(0)
+    assert s.get("k00011") == _rec(11)
+    assert len(s) == 12
+    s.close()
+    names = sorted(os.listdir(root))
+    assert "seg-000001.jsonl" in names and "seg-000001.idx" in names
+
+
+def test_warm_start_is_lazy(tmp_path):
+    root = str(tmp_path / "labels.segd")
+    s = SegmentedLabelStore(root, segment_records=4)
+    _fill(s, 17)
+    s.close()
+
+    s2 = SegmentedLabelStore(root, segment_records=4)
+    # the whole index is visible WITHOUT parsing one sealed body
+    assert len(s2) == 17
+    assert s2.segments_loaded == 0
+    # reading a sealed key loads exactly that segment
+    assert s2.get("k00000") == _rec(0)
+    assert s2.segments_loaded == 1
+    # tail records were never sealed: no load needed
+    assert s2.get("k00016") == _rec(16)
+    assert s2.segments_loaded == 1
+    s2.close()
+
+
+def test_corrupt_segment_quarantined_and_store_continues(tmp_path):
+    root = str(tmp_path / "labels.segd")
+    s = SegmentedLabelStore(root, segment_records=4)
+    _fill(s, 12)
+    s.close()
+
+    # flip bytes in the middle of a sealed segment
+    victim = os.path.join(root, "seg-000002.jsonl")
+    with open(victim, "r+") as f:
+        f.seek(20)
+        f.write("XXXX")
+
+    s2 = SegmentedLabelStore(root, segment_records=4)
+    assert len(s2) == 12              # sidecar index: damage unseen yet
+    # touching a key in the damaged segment quarantines it; its keys
+    # become clean misses while everything else keeps answering
+    assert s2.get("k00004") is None
+    st = s2.stats()
+    assert st["quarantined_segments"] == 1
+    assert st["quarantined"] >= 1
+    assert os.path.exists(
+        os.path.join(root, "quarantine", "seg-000002.jsonl"))
+    assert s2.get("k00000") == _rec(0)       # other segments fine
+    assert s2.get("k00008") == _rec(8)
+    # the miss can be relabeled and the store moves on
+    s2.put("k00004", _rec(4))
+    assert s2.get("k00004") == _rec(4)
+    s2.close()
+
+
+def test_torn_tail_repaired_not_merged(tmp_path):
+    root = str(tmp_path / "labels.segd")
+    s = SegmentedLabelStore(root, segment_records=100)
+    _fill(s, 3)
+    # a foreign writer dies mid-append: partial record, no newline
+    with open(os.path.join(root, "active.jsonl"), "a") as f:
+        f.write(frame_record({"k": "kdead", "l": _rec(99)})[:30])
+    # our next append must quarantine the fragment ALONE — not merge
+    # it with (and destroy) the first fresh record
+    _fill(s, 2, start=3)
+    st = s.stats()
+    assert st["repaired_tails"] == 1 and st["quarantined"] == 1
+    s.close()
+
+    s2 = SegmentedLabelStore(root)
+    assert len(s2) == 5
+    for i in range(5):
+        assert s2.get(f"k{i:05d}") == _rec(i)
+    assert s2.get("kdead") is None
+    s2.close()
+
+
+def test_injected_torn_write_never_loses_labels(tmp_path):
+    root = str(tmp_path / "labels.segd")
+    faults.install(FaultPlan(seed=2).add(
+        "store.append", "torn_write", times=3, fraction=0.4))
+    s = SegmentedLabelStore(root, segment_records=6)
+    for i in range(5):                       # 5 appends, 3 injections
+        _fill(s, 4, start=4 * i)
+    faults.uninstall()
+    assert s.stats()["repaired_tails"] >= 2  # first append has no tail
+    s.close()
+
+    s2 = SegmentedLabelStore(root)
+    for i in range(20):
+        assert s2.get(f"k{i:05d}") == _rec(i), f"label {i} lost"
+    s2.close()
+
+
+def test_orphan_segment_adopted_on_open(tmp_path):
+    """A sealer killed between rename and manifest write leaves an
+    orphan seg file; the next open adopts it, records intact."""
+    root = str(tmp_path / "labels.segd")
+    s = SegmentedLabelStore(root, segment_records=4)
+    _fill(s, 6)       # one sealed segment + 2-record tail
+    s.close()
+
+    # simulate the crash window: a sealed file the manifest never saw
+    orphan = os.path.join(root, "seg-000009.jsonl")
+    with open(orphan, "w") as f:
+        f.write(frame_record({"k": "korphan", "l": _rec(42),
+                              "t": 0.0}))
+    s2 = SegmentedLabelStore(root, segment_records=4)
+    assert s2.get("korphan") == _rec(42)
+    m = s2._seglog.manifest()
+    assert any(e["name"] == "seg-000009.jsonl" for e in m["sealed"])
+    s2.close()
+
+
+def test_retention_evicts_oldest_segments(tmp_path):
+    root = str(tmp_path / "labels.segd")
+    s = SegmentedLabelStore(root, segment_records=3,
+                            retention_segments=2)
+    _fill(s, 12)      # 4 seals -> oldest 2 evicted
+    assert s.stats()["segments"] == 2
+    assert s.get("k00000") is None        # evicted -> clean miss
+    assert s.get("k00011") == _rec(11)    # recent survives
+    s.close()
+
+
+def test_multiwriter_instances_share_one_root(tmp_path):
+    root = str(tmp_path / "labels.segd")
+    a = SegmentedLabelStore(root, segment_records=4)
+    b = SegmentedLabelStore(root, segment_records=4)
+    _fill(a, 6)
+    _fill(b, 6, start=6)
+    a.refresh()
+    b.refresh()
+    assert len(a) == 12 and len(b) == 12
+    assert a.get("k00009") == _rec(9)
+    assert b.get("k00002") == _rec(2)
+    a.close()
+    b.close()
+
+
+def test_store_lock_latency_fault_applies(tmp_path):
+    import time as _time
+
+    faults.install(FaultPlan().add("store.lock", "latency",
+                                   delay_s=0.05, times=1))
+    t0 = _time.perf_counter()
+    s = SegmentedLabelStore(str(tmp_path / "l.segd"))
+    assert _time.perf_counter() - t0 >= 0.04
+    s.close()
+
+
+# ---------------------------------------------------------------------------
+# legacy single-file stores: counted quarantine + migration
+# ---------------------------------------------------------------------------
+
+def test_jsonl_store_counts_torn_tail_and_malformed(tmp_path):
+    path = str(tmp_path / "labels.jsonl")
+    s = JsonlLabelStore(path)
+    _fill(s, 2)
+    s.close()
+    with open(path, "a") as f:
+        f.write('{"broken json\n')           # malformed complete line
+        f.write('{"k": "kdead", "l": {')     # torn tail, no newline
+
+    s2 = JsonlLabelStore(path)
+    assert s2.quarantined == 1               # the malformed line
+    _fill(s2, 1, start=2)                    # append repairs the tail
+    assert s2.quarantined == 2
+    assert s2.stats()["quarantined"] == 2
+    s2.close()
+
+    s3 = JsonlLabelStore(path)               # replay sees clean lines
+    assert len(s3) == 3
+    for i in range(3):
+        assert s3.get(f"k{i:05d}") == _rec(i)
+    s3.close()
+
+
+def test_migration_check(tmp_path):
+    """The examples-smoke migration node: a legacy .jsonl opens as a
+    segmented store with every record answering warm, the old file is
+    kept as evidence, and replicas resolve the migrated root."""
+    path = str(tmp_path / "labels.jsonl")
+    legacy = JsonlLabelStore(path)
+    _fill(legacy, 8)
+    legacy.close()
+
+    # replicas never migrate: same path -> still the legacy store
+    r = open_label_store(path)
+    assert isinstance(r, JsonlLabelStore)
+    r.close()
+
+    s = open_label_store(path, migrate=True)
+    assert isinstance(s, SegmentedLabelStore)
+    assert len(s) == 8
+    for i in range(8):
+        assert s.get(f"k{i:05d}") == _rec(i)
+    assert not os.path.exists(path)
+    assert os.path.exists(path + ".migrated")
+    s.close()
+
+    # post-migration, a replica handed the ORIGINAL path resolves the
+    # segmented root (the parent renamed the file away)
+    r2 = open_label_store(path)
+    assert isinstance(r2, SegmentedLabelStore)
+    assert len(r2) == 8
+    r2.close()
+
+
+def test_open_label_store_plain_root(tmp_path):
+    s = open_label_store(str(tmp_path / "labels"))
+    assert isinstance(s, SegmentedLabelStore)
+    _fill(s, 2)
+    s.close()
+
+
+# ---------------------------------------------------------------------------
+# segmented synth cache
+# ---------------------------------------------------------------------------
+
+def test_segmented_synth_cache_roundtrip(tmp_path):
+    from repro.core.features.synth import (
+        JsonlSynthCache,
+        SegmentedSynthCache,
+        open_synth_cache,
+    )
+
+    root = str(tmp_path / "synth.segd")
+    c = SegmentedSynthCache(root, segment_records=3)
+    for i in range(7):
+        c.store({"k": f"id{i}", "flops": float(i),
+                 "hbm_bytes": float(i * 2)})
+    c.verdict_pass("famA")                      # countdown ticks down
+    c.verdict_pin("famB")                       # proven divergent
+    passed = c.verdict("famA")
+    assert c.stats()["segments"] >= 2
+    c.close()
+
+    c2 = SegmentedSynthCache(root, segment_records=3)
+    assert c2.get_identity("id3")["flops"] == 3.0
+    assert c2.verdict("famA") == passed          # progress persisted
+    assert c2.verdict("famB") is False           # pin persisted
+    c2.close()
+
+    # legacy migration
+    jpath = str(tmp_path / "legacy.jsonl")
+    j = JsonlSynthCache(jpath)
+    j.store({"k": "idX", "flops": 1.0, "hbm_bytes": 2.0})
+    j.close()
+    m = open_synth_cache(jpath, migrate=True)
+    assert isinstance(m, SegmentedSynthCache)
+    assert m.get_identity("idX") is not None
+    assert os.path.exists(jpath + ".migrated")
+    m.close()
+    # replica open after migration resolves the segmented root
+    m2 = open_synth_cache(jpath)
+    assert isinstance(m2, SegmentedSynthCache)
+    assert m2.get_identity("idX") is not None
+    m2.close()
+
+
+def test_synth_cache_quarantines_damaged_segment(tmp_path):
+    from repro.core.features.synth import SegmentedSynthCache
+
+    root = str(tmp_path / "synth.segd")
+    c = SegmentedSynthCache(root, segment_records=2)
+    for i in range(6):
+        c.store({"k": f"id{i}", "flops": float(i), "hbm_bytes": 1.0})
+    c.close()
+
+    victim = os.path.join(root, "seg-000002.jsonl")
+    with open(victim, "r+") as f:
+        f.seek(10)
+        f.write("????")
+
+    c2 = SegmentedSynthCache(root, segment_records=2)
+    st = c2.stats()
+    assert st["quarantined_segments"] == 1
+    # lost compiles are just recompiled; the rest answer warm
+    assert c2.get_identity("id0") is not None
+    c2.close()

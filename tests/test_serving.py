@@ -429,3 +429,132 @@ def test_lm_policy_for_genome():
     from repro.serving import LMBackend, make_backend
 
     assert isinstance(make_backend(accel, lib), LMBackend)
+
+
+# ---------------------------------------------------------------------------
+# graceful degradation: backpressure, deadlines, injected backend faults
+# ---------------------------------------------------------------------------
+
+def test_bounded_queue_rejects_with_retriable_overload(gauss):
+    from repro import faults
+    from repro.faults import FaultPlan
+    from repro.serving.engine import OverloadedError
+
+    accel, lib, g_exact, g_cheap = gauss
+    # stall the backend so the queue actually fills
+    faults.install(FaultPlan().add("serving.backend", "latency",
+                                   delay_s=0.3))
+    eng = ServingEngine(accel, lib, max_batch=1, max_wait_s=0.0,
+                        max_queue=2,
+                        catalog=_gauss_cat(accel, g_exact, g_cheap))
+    try:
+        X = accel.sample_inputs(1, seed=0)
+        admitted = []
+        rejected = 0
+        for _ in range(12):
+            try:
+                admitted.append(eng.submit(X, tier="exact"))
+            except OverloadedError as exc:
+                assert exc.retriable and "retry" in str(exc)
+                rejected += 1
+        assert rejected > 0                     # the bound bites
+        faults.uninstall()
+        for f in admitted:                      # admitted work completes
+            assert f.result(timeout=120)["qor"] == pytest.approx(100.0)
+        st = eng.stats()
+        assert st["rejects"] == rejected
+        assert st["responses"] == len(admitted)
+    finally:
+        faults.uninstall()
+        eng.close()
+
+
+def test_deadline_expired_request_dropped_not_run(gauss):
+    from repro import faults
+    from repro.faults import FaultPlan
+    from repro.serving.engine import DeadlineExceeded
+
+    accel, lib, g_exact, g_cheap = gauss
+    faults.install(FaultPlan().add("serving.backend", "latency",
+                                   delay_s=0.4, times=1))
+    eng = ServingEngine(accel, lib, max_batch=1, max_wait_s=0.0,
+                        catalog=_gauss_cat(accel, g_exact, g_cheap))
+    try:
+        X = accel.sample_inputs(1, seed=0)
+        # first request stalls the batcher; the second's deadline
+        # elapses while it waits and it is dropped, not executed
+        slow = eng.submit(X, tier="exact")
+        doomed = eng.submit(X, tier="exact", deadline_s=0.05)
+        assert slow.result(timeout=120)["qor"] == pytest.approx(100.0)
+        with pytest.raises(DeadlineExceeded):
+            doomed.result(timeout=120)
+        assert eng.stats()["expired"] == 1
+    finally:
+        faults.uninstall()
+        eng.close()
+
+
+def test_injected_backend_error_isolated_per_group(gauss):
+    from repro import faults
+    from repro.faults import FaultInjected, FaultPlan
+
+    accel, lib, g_exact, g_cheap = gauss
+    faults.install(FaultPlan().add("serving.backend", "error", times=1))
+    eng = ServingEngine(accel, lib, max_batch=1, max_wait_s=0.0,
+                        catalog=_gauss_cat(accel, g_exact, g_cheap))
+    try:
+        X = accel.sample_inputs(1, seed=0)
+        with pytest.raises(FaultInjected):
+            eng.serve(X, tier="exact", timeout=120)
+        # the engine survives: the next request serves normally
+        assert eng.serve(X, tier="exact",
+                         timeout=120)["qor"] == pytest.approx(100.0)
+        assert eng.stats()["errors"] == 1
+    finally:
+        faults.uninstall()
+        eng.close()
+
+
+def test_http_serve_maps_overload_to_429(gauss):
+    from repro import faults
+    from repro.faults import FaultPlan
+    from repro.fleet.http import HttpError
+    from repro.service.api import Client, make_server
+
+    mgr = CampaignManager(eval_workers=1, campaign_workers=1,
+                          serving=dict(max_batch=1, max_wait_s=0.0,
+                                       max_queue=1))
+    srv = make_server(mgr, port=0)
+    threading.Thread(target=srv.serve_forever, daemon=True).start()
+    try:
+        cid = mgr.submit(CampaignSpec(accel="gaussian3x3", **SMALL))
+        assert mgr.wait(cid, timeout=600) == "done"
+        cli = Client(f"http://127.0.0.1:{srv.server_address[1]}")
+        X = make_accelerator("gaussian3x3").sample_inputs(1, seed=0)
+        assert "qor" in cli.serve("gaussian3x3", X, tier="exact")
+        faults.install(FaultPlan().add("serving.backend", "latency",
+                                       delay_s=0.5))
+        # saturate the 1-deep queue, then expect a 429 (no retries so
+        # the rejection surfaces instead of being waited out)
+        saw_429 = False
+        futs = []
+        from concurrent.futures import ThreadPoolExecutor
+
+        def one():
+            return cli._req("/serve", {"accel": "gaussian3x3",
+                                       "inputs": X.tolist(),
+                                       "tier": "exact"})
+
+        with ThreadPoolExecutor(8) as pool:
+            futs = [pool.submit(one) for _ in range(8)]
+            for f in futs:
+                try:
+                    f.result()
+                except HttpError as exc:
+                    if exc.code == 429:
+                        saw_429 = True
+        assert saw_429
+    finally:
+        faults.uninstall()
+        srv.shutdown()
+        mgr.shutdown()

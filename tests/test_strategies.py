@@ -389,6 +389,94 @@ def test_resume_across_manager_restart(tmp_path):
         store2.close()
 
 
+def _free_port():
+    import socket
+
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    return port
+
+
+def _spawn_service(port, store, snaps):
+    import subprocess
+    import sys
+
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    return subprocess.Popen(
+        [sys.executable, "-m", "repro.service", "--port", str(port),
+         "--store", store, "--snapshots", snaps, "--synth-cache", "",
+         "--eval-workers", "2", "--campaign-workers", "1"],
+        env={**os.environ, "PYTHONPATH": src},
+        stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL,
+    )
+
+
+def _wait_healthy(cli, proc, timeout=60.0):
+    t0 = time.time()
+    while time.time() - t0 < timeout:
+        if proc.poll() is not None:
+            raise RuntimeError(f"service died rc={proc.returncode}")
+        try:
+            if cli.health()["ok"]:
+                return
+        except Exception:
+            time.sleep(0.1)
+    raise TimeoutError("service never became healthy")
+
+
+def test_kill9_service_restart_resume_front_is_byte_identical(tmp_path):
+    """Crash-safety acceptance: SIGKILL the service process mid-EXPLORE
+    (no atexit, no flush, no snapshot-on-shutdown), restart it on the
+    same --store/--snapshots, resume the campaign over HTTP, and the
+    finished front is byte-identical to an uninterrupted twin."""
+    from repro.service.api import Client
+
+    spec = {"accel": "mcm2", **SMALL, "n_generations": 12}
+    ref = run_dse(MCMAccelerator(1), LIB,
+                  CampaignSpec(**spec).dse_config())
+    store = str(tmp_path / "labels.jsonl")
+    snaps = str(tmp_path / "snaps.jsonl")
+    port = _free_port()
+
+    proc = _spawn_service(port, store, snaps)
+    cli = Client(f"http://127.0.0.1:{port}", timeout=10.0)
+    try:
+        _wait_healthy(cli, proc)
+        cid = cli.submit(**spec)
+        t0 = time.time()
+        while time.time() - t0 < 120:
+            st = cli.status(cid)
+            if st["state"] == "done":
+                break  # raced to completion before we could kill
+            if (st.get("progress") or {}).get("stage") in ("explore",
+                                                           "final"):
+                break
+            time.sleep(0.01)
+        if st["state"] == "done":        # raced: nothing left to kill mid-run
+            assert np.array_equal(np.asarray(cli.result(cid)["front"]),
+                                  ref.front_objectives)
+            return
+        proc.kill()                      # SIGKILL: no cleanup of any kind
+        proc.wait(timeout=30)
+
+        proc = _spawn_service(port, store, snaps)
+        _wait_healthy(cli, proc)
+        # the tick-boundary snapshot survived the kill
+        cli.resume(cid)
+        st = cli.wait(cid, timeout=600)
+        assert st["state"] == "done"
+        assert np.array_equal(np.asarray(cli.result(cid)["front"]),
+                              ref.front_objectives)
+        # the store the killed process was appending to reopened clean
+        h = cli.health()
+        assert h["ok"] and h["store"]["writable"]
+    finally:
+        proc.kill()
+        proc.wait(timeout=30)
+
+
 def test_cancel_validation():
     mgr = CampaignManager(eval_workers=1, campaign_workers=1)
     try:
